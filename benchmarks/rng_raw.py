@@ -1,0 +1,85 @@
+"""Raw-JAX implementation of the massive-PRNG app (the paper's Listing S1
+counterpart): identical double-buffered two-thread pipeline, but written
+directly against jax APIs — manual timing, manual event bookkeeping, no
+overlap analysis, no error objects.  Used by the LOC and overhead
+benchmarks as the "pure OpenCL" baseline."""
+
+import functools
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.xorshift_prng.xorshift_prng import init_pallas, rng_pallas
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(numrn: int, rows: int):
+    init = jax.jit(lambda: init_pallas(numrn, rows, 8, interpret=_INTERPRET))
+    step = jax.jit(lambda h, l: rng_pallas(h, l, 8, interpret=_INTERPRET))
+    return init, step
+
+
+def run(numrn: int, numiter: int, out=None):
+    rows = ((numrn + 8 * 128 - 1) // (8 * 128)) * 8
+    t_kernels = []
+    t_reads = []
+    sem_rng = threading.Semaphore(1)
+    sem_comm = threading.Semaphore(1)
+    shared = {"state": None, "err": None}
+
+    init, step = _jitted(numrn, rows)
+
+    def rng_out():
+        for _ in range(numiter):
+            sem_rng.acquire()
+            try:
+                t0 = time.perf_counter()
+                hi, lo = shared["state"]
+                host_hi = np.asarray(hi)
+                host_lo = np.asarray(lo)
+                t_reads.append(time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001
+                shared["err"] = e
+                sem_comm.release()
+                return
+            sem_comm.release()
+            if out is not None:
+                vals = (host_hi.astype(np.uint64) << np.uint64(32)) | \
+                    host_lo.astype(np.uint64)
+                out.write(vals.tobytes()[: numrn * 8])
+
+    t_start = time.perf_counter()
+    t0 = time.perf_counter()
+    hi, lo = init()
+    jax.block_until_ready((hi, lo))
+    t_kernels.append(time.perf_counter() - t0)
+    shared["state"] = (hi, lo)
+
+    th = threading.Thread(target=rng_out)
+    th.start()
+    for _ in range(numiter - 1):
+        sem_comm.acquire()
+        if shared["err"] is not None:
+            raise shared["err"]
+        t0 = time.perf_counter()
+        hi, lo = step(hi, lo)
+        jax.block_until_ready((hi, lo))
+        t_kernels.append(time.perf_counter() - t0)
+        shared["state"] = (hi, lo)
+        sem_rng.release()
+    th.join()
+    total = time.perf_counter() - t_start
+    return {"total_s": total, "kernel_s": sum(t_kernels),
+            "read_s": sum(t_reads)}
+
+
+if __name__ == "__main__":
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 1 << 18
+    i = int(sys.argv[2]) if len(sys.argv) > 2 else 16
+    print(run(n, i))

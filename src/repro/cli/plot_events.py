@@ -1,0 +1,29 @@
+"""``ccl_plot_events`` analogue — queue-utilization chart from an exported
+profile table (paper Fig. 5), rendered as ASCII.
+
+Usage:
+    PYTHONPATH=src python -m repro.cli.plot_events profile.tsv [--width 120]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from ..prof.export import parse_table, render_queue_chart
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="queue utilization chart")
+    ap.add_argument("table", help="TSV exported by prof.export_table")
+    ap.add_argument("--width", type=int, default=100)
+    args = ap.parse_args(argv)
+    text = pathlib.Path(args.table).read_text()
+    rows = parse_table(text)
+    print(render_queue_chart(rows, width=args.width))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""gemma-7b [dense] — GeGLU, head_dim=256, (1+w) norms, scaled embeddings.
+
+28L d_model=3072 16H (kv=16) d_ff=24576 vocab=256000 [arXiv:2403.08295].
+long_500k skipped: full attention.
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-7b", family="dense",
+        num_layers=28, d_model=3072, n_heads=16, n_kv_heads=16,
+        head_dim=256, d_ff=24576, vocab=256000,
+        pattern=(("full", "dense"),),
+        act="geglu", glu=True, norm_plus_one=True, embed_scale=True,
+        tie_embeddings=True,
+        sub_quadratic=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-smoke", family="dense",
+        num_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=32, d_ff=256, vocab=256,
+        pattern=(("full", "dense"),),
+        act="geglu", glu=True, norm_plus_one=True, embed_scale=True,
+        tie_embeddings=True,
+        sub_quadratic=False, dtype="float32",
+    )

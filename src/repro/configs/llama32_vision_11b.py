@@ -1,0 +1,34 @@
+"""llama-3.2-vision-11b [vlm] — cross-attention image layers every 5th.
+
+40L d_model=4096 32H (kv=8) d_ff=14336 vocab=128256
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+Vision frontend stubbed: ``input_specs`` provides precomputed patch
+embeddings (vis_tokens × d_model).  long_500k skipped: full attention.
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b", family="vlm",
+        num_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+        head_dim=128, d_ff=14336, vocab=128256,
+        pattern=(("full", "dense"), ("full", "dense"), ("full", "dense"),
+                 ("full", "dense"), ("cross", "dense")),
+        act="silu", glu=True, rope_theta=5e5,
+        vis_tokens=1600,
+        sub_quadratic=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama32v-smoke", family="vlm",
+        num_layers=5, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=256,
+        pattern=(("full", "dense"), ("full", "dense"), ("full", "dense"),
+                 ("full", "dense"), ("cross", "dense")),
+        act="silu", glu=True, vis_tokens=16,
+        sub_quadratic=False, dtype="float32",
+    )

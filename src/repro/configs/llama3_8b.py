@@ -1,0 +1,29 @@
+"""llama3-8b [dense] — GQA, 128k vocab.
+
+32L d_model=4096 32H (kv=8) d_ff=14336 vocab=128256 [arXiv:2407.21783].
+long_500k skipped: full attention.
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b", family="dense",
+        num_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        head_dim=128, d_ff=14336, vocab=128256,
+        pattern=(("full", "dense"),),
+        act="silu", glu=True, rope_theta=5e5,
+        sub_quadratic=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-smoke", family="dense",
+        num_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=160, vocab=256,
+        pattern=(("full", "dense"),),
+        act="silu", glu=True,
+        sub_quadratic=False, dtype="float32",
+    )

@@ -1,0 +1,33 @@
+"""mamba2-1.3b [ssm] — attention-free SSD (state-space duality).
+
+48L d_model=2048 d_ff=0 vocab=50280, ssm_state=128 [arXiv:2405.21060].
+d_inner = 2·d_model = 4096, head_dim 64 → 64 SSD heads, 1 B/C group.
+long_500k runs: decode state is O(heads·head_dim·state), seq-independent.
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b", family="ssm",
+        num_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+        head_dim=128, d_ff=0, vocab=50280,
+        pattern=(("ssm", "none"),),
+        ssm_state=128, ssm_heads=64, ssm_head_dim=64, ssm_groups=1,
+        ssm_expand=2, ssm_chunk=256, conv_kernel=4,
+        tie_embeddings=True,
+        sub_quadratic=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm",
+        num_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=0, vocab=256,
+        pattern=(("ssm", "none"),),
+        ssm_state=16, ssm_heads=8, ssm_head_dim=16, ssm_groups=1,
+        ssm_expand=2, ssm_chunk=8, conv_kernel=4,
+        tie_embeddings=True, sub_quadratic=True, dtype="float32",
+    )

@@ -1,0 +1,29 @@
+"""qwen3-8b [dense] — GQA + qk_norm.
+
+36L d_model=4096 32H (kv=8) d_ff=12288 vocab=151936 [hf:Qwen/Qwen3-8B].
+long_500k skipped: full attention.
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b", family="dense",
+        num_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+        head_dim=128, d_ff=12288, vocab=151936,
+        pattern=(("full", "dense"),),
+        act="silu", glu=True, qk_norm=True, rope_theta=1e6,
+        sub_quadratic=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-smoke", family="dense",
+        num_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=256,
+        pattern=(("full", "dense"),),
+        act="silu", glu=True, qk_norm=True,
+        sub_quadratic=False, dtype="float32",
+    )

@@ -1,0 +1,35 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 2:1 pattern.
+
+38L d_model=4096 16H (kv=1, MQA) d_ff=12288 vocab=256000
+[arXiv:2402.19427 Griffin].  38 = 12×(rec,rec,local) + (rec,rec) — the
+remainder group exercises the heterogeneous-pattern machinery.
+long_500k runs: RG-LRU state + window-2048 rolling KV → O(1) decode.
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", family="hybrid",
+        num_layers=38, d_model=4096, n_heads=16, n_kv_heads=1,
+        head_dim=256, d_ff=12288, vocab=256000,
+        pattern=(("rec", "dense"), ("rec", "dense"), ("local", "dense")),
+        act="geglu", glu=True, norm_plus_one=True, embed_scale=True,
+        tie_embeddings=True,
+        window=2048, lru_width=4096, conv_kernel=4,
+        sub_quadratic=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-smoke", family="hybrid",
+        num_layers=5, d_model=64, n_heads=4, n_kv_heads=1,
+        head_dim=16, d_ff=128, vocab=256,
+        pattern=(("rec", "dense"), ("rec", "dense"), ("local", "dense")),
+        act="geglu", glu=True, norm_plus_one=True, embed_scale=True,
+        tie_embeddings=True,
+        window=8, lru_width=64, conv_kernel=4,
+        sub_quadratic=True, dtype="float32",
+    )

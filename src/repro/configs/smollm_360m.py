@@ -1,0 +1,31 @@
+"""smollm-360m [dense] — llama-arch small; 15 heads (intentionally not
+divisible by the 16-way model axis — exercises the sharding fallback).
+
+32L d_model=960 15H (kv=5) d_ff=2560 vocab=49152
+[hf:HuggingFaceTB/SmolLM-360M].
+long_500k skipped: full attention.
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-360m", family="dense",
+        num_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+        head_dim=64, d_ff=2560, vocab=49152,
+        pattern=(("full", "dense"),),
+        act="silu", glu=True, tie_embeddings=True,
+        sub_quadratic=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-smoke", family="dense",
+        num_layers=2, d_model=60, n_heads=3, n_kv_heads=1,
+        head_dim=20, d_ff=160, vocab=256,
+        pattern=(("full", "dense"),),
+        act="silu", glu=True, tie_embeddings=True,
+        sub_quadratic=False, dtype="float32",
+    )

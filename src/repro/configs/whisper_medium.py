@@ -1,0 +1,34 @@
+"""whisper-medium [audio] — enc-dec, conv frontend stubbed.
+
+24L d_model=1024 16H (kv=16) d_ff=4096 vocab=51865 [arXiv:2212.04356].
+The mel/conv frontend is a stub: ``input_specs`` provides precomputed frame
+embeddings (1500 frames × d_model) to the 24-layer bidirectional encoder.
+Positional encoding approximated with RoPE (DESIGN.md §8).
+long_500k skipped: full-attention decoder (quadratic).
+"""
+
+from repro.models.model import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", family="audio",
+        num_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        head_dim=64, d_ff=4096, vocab=51865,
+        pattern=(("self_cross", "dense"),),
+        act="gelu", glu=False, rope_theta=1e4,
+        encoder_layers=24, encoder_seq=1500,
+        sub_quadratic=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium-smoke", family="audio",
+        num_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=256,
+        pattern=(("self_cross", "dense"),),
+        act="gelu", glu=False,
+        encoder_layers=2, encoder_seq=32,
+        sub_quadratic=False, dtype="float32",
+    )

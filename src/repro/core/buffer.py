@@ -1,0 +1,106 @@
+"""Buffer wrapper — ``CCLBuffer``/``CCLMemObj`` analogue.
+
+Wraps a (possibly sharded) :class:`jax.Array`.  Like cf4ocl's memory
+objects, buffers are created from a context, may be written/read through
+queues (emitting events), and are explicitly destroyed.  The double-buffer
+swap idiom from the paper's PRNG example is supported first-class.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .context import Context
+from .errors import Code, ErrBox, guard, raise_or_record
+from .wrapper import Wrapper
+
+
+class Buffer(Wrapper):
+    _counter = 0
+
+    def __init__(self, context: Context, shape: Tuple[int, ...], dtype,
+                 sharding: Optional[NamedSharding] = None,
+                 array: Optional[jax.Array] = None):
+        Buffer._counter += 1
+        super().__init__(("buf", Buffer._counter))
+        self.context = context
+        self.shape = tuple(shape)
+        self.dtype = jnp.dtype(dtype)
+        self.sharding = sharding
+        self._array = array
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def new(cls, context: Context, shape: Tuple[int, ...], dtype,
+            spec: Optional[P] = None, fill=None,
+            err: Optional[ErrBox] = None) -> Optional["Buffer"]:
+        """Create a device buffer, optionally sharded with PartitionSpec
+        ``spec`` over the context mesh, optionally initialized to ``fill``."""
+        with guard(err) as g:
+            sharding = None
+            if spec is not None:
+                mesh = context.require_mesh()
+                sharding = NamedSharding(mesh, spec)
+            arr = None
+            if fill is not None:
+                arr = jnp.full(shape, fill, dtype)
+                if sharding is not None:
+                    arr = jax.device_put(arr, sharding)
+                elif context.num_devices:
+                    arr = jax.device_put(arr, context.device(0).unwrap())
+            return cls(context, shape, dtype, sharding, arr)
+        return None
+
+    @classmethod
+    def from_array(cls, context: Context, arr: jax.Array) -> "Buffer":
+        sh = arr.sharding if isinstance(arr, jax.Array) else None
+        return cls(context, arr.shape, arr.dtype,
+                   sh if isinstance(sh, NamedSharding) else None, arr)
+
+    # -- data access ----------------------------------------------------------
+    @property
+    def array(self) -> jax.Array:
+        if self._array is None:
+            # Lazy-allocate zeros on first touch (OpenCL buffers are
+            # uninitialized; zeros is the safe analogue).
+            arr = jnp.zeros(self.shape, self.dtype)
+            if self.sharding is not None:
+                arr = jax.device_put(arr, self.sharding)
+            self._array = arr
+        return self._array
+
+    @array.setter
+    def array(self, value: jax.Array) -> None:
+        self._array = value
+
+    def put(self, host_array) -> None:
+        arr = jnp.asarray(host_array, self.dtype)
+        if arr.shape != self.shape:
+            raise_or_record(None, Code.INVALID_BUFFER,
+                            f"Write shape {arr.shape} != buffer {self.shape}")
+        if self.sharding is not None:
+            arr = jax.device_put(arr, self.sharding)
+        self._array = arr
+
+    def get(self) -> np.ndarray:
+        return np.asarray(jax.device_get(self.array))
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * self.dtype.itemsize
+
+    def _release(self) -> None:
+        self._array = None
+
+
+def swap(a: Buffer, b: Buffer) -> Tuple[Buffer, Buffer]:
+    """Double-buffering swap (returns (b, a)) — the paper's idiom."""
+    return b, a
+
+
+__all__ = ["Buffer", "swap"]

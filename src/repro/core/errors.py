@@ -1,0 +1,192 @@
+"""Error management — the cf4ocl ``errors`` module adapted to Python/JAX.
+
+cf4ocl reports errors through two simultaneous channels: the return value of
+the fallible function and an optional error object passed as the last
+argument (``CCLErr **err``).  Client code uses whichever is convenient.
+
+The Python adaptation keeps both styles:
+
+* call ``f(..., err=None)`` (default)   → failures raise :class:`ReproError`.
+* call ``f(..., err=box)`` with an :class:`ErrBox` → failures are recorded in
+  the box and a sentinel (``None``) is returned; the caller checks
+  ``box.set`` / ``box.err`` exactly like cf4ocl's ``HANDLE_ERROR(err)``.
+
+The module also provides :func:`err_string`, the analogue of cf4ocl's single
+error-code→string conversion function, mapping both our own codes and common
+XLA/StableHLO failure signatures onto human-readable strings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import re
+from typing import Any, Optional
+
+
+class Code(enum.IntEnum):
+    """Error codes (the OpenCL ``CL_*`` status analogue)."""
+
+    SUCCESS = 0
+    INVALID_VALUE = -30
+    INVALID_DEVICE = -33
+    INVALID_CONTEXT = -34
+    INVALID_QUEUE = -36
+    INVALID_PROGRAM = -44
+    INVALID_KERNEL = -48
+    INVALID_BUFFER = -38
+    BUILD_PROGRAM_FAILURE = -11
+    OUT_OF_RESOURCES = -5
+    DEVICE_NOT_FOUND = -1
+    PROFILING_INFO_NOT_AVAILABLE = -7
+    SHARDING_MISMATCH = -100
+    COMPILE_FAILURE = -101
+    CHECKPOINT_CORRUPT = -102
+    ELASTIC_RESHAPE_FAILURE = -103
+    STRAGGLER_TIMEOUT = -104
+    WRAPPER_LEAK = -105
+
+
+_ERR_STRINGS = {
+    Code.SUCCESS: "Success",
+    Code.INVALID_VALUE: "Invalid value passed to a repro function",
+    Code.INVALID_DEVICE: "Invalid or unavailable device",
+    Code.INVALID_CONTEXT: "Invalid context (device set / mesh mismatch)",
+    Code.INVALID_QUEUE: "Invalid dispatch queue",
+    Code.INVALID_PROGRAM: "Invalid program object",
+    Code.INVALID_KERNEL: "Invalid kernel / compiled executable",
+    Code.INVALID_BUFFER: "Invalid buffer object",
+    Code.BUILD_PROGRAM_FAILURE: "Program build (trace/lower/compile) failure",
+    Code.OUT_OF_RESOURCES: "Out of device resources (HBM/VMEM)",
+    Code.DEVICE_NOT_FOUND: "No device matching the requested filters",
+    Code.PROFILING_INFO_NOT_AVAILABLE:
+        "Profiling info not available (queue created without profiling)",
+    Code.SHARDING_MISMATCH: "Sharding specification incompatible with mesh",
+    Code.COMPILE_FAILURE: "XLA AOT compilation failed",
+    Code.CHECKPOINT_CORRUPT: "Checkpoint manifest or shard corrupt",
+    Code.ELASTIC_RESHAPE_FAILURE: "Elastic reshard between meshes failed",
+    Code.STRAGGLER_TIMEOUT: "Worker heartbeat missed straggler deadline",
+    Code.WRAPPER_LEAK: "Wrapper objects leaked (new/destroy mismatch)",
+}
+
+
+def err_string(code: int) -> str:
+    """Convert an error code into a human-readable string (cf. cf4ocl errors
+    module, which wraps ``clerror`` codes)."""
+    try:
+        return _ERR_STRINGS[Code(code)]
+    except ValueError:
+        return f"Unknown repro error code {code}"
+
+
+# Signatures of common XLA error texts → friendlier hints, used to build
+# the "build log" the way cf4ocl surfaces clBuildProgram logs.
+_XLA_HINTS = (
+    (re.compile(r"requires the size of .* to be divisible", re.I),
+     "A sharded dimension is not divisible by the mesh axis size; "
+     "adjust the sharding rule or pad the dimension."),
+    (re.compile(r"RESOURCE_EXHAUSTED|out of memory", re.I),
+     "Per-device allocation exceeds device memory; increase model-parallel "
+     "degree, enable remat, or shrink the microbatch."),
+    (re.compile(r"incompatible shapes?", re.I),
+     "Operand shapes disagree — usually a config/spec mismatch."),
+)
+
+
+def explain_xla_error(text: str) -> str:
+    for pat, hint in _XLA_HINTS:
+        if pat.search(text):
+            return hint
+    return "See raw XLA diagnostic above."
+
+
+class ReproError(Exception):
+    """Exception carrying a :class:`Code` and a context message."""
+
+    def __init__(self, code: Code, message: str, cause: Optional[BaseException] = None):
+        self.code = Code(code)
+        self.message = message
+        self.cause = cause
+        super().__init__(f"[{self.code.name} ({int(self.code)})] {message}")
+
+
+@dataclasses.dataclass
+class ErrBox:
+    """Out-parameter error holder — the ``CCLErr **err`` analogue."""
+
+    err: Optional[ReproError] = None
+
+    @property
+    def set(self) -> bool:
+        return self.err is not None
+
+    @property
+    def code(self) -> Code:
+        return self.err.code if self.err else Code.SUCCESS
+
+    @property
+    def message(self) -> str:
+        return self.err.message if self.err else ""
+
+    def clear(self) -> None:
+        """``ccl_err_clear`` analogue."""
+        self.err = None
+
+    def check(self) -> None:
+        """Raise if an error is recorded (convenience HANDLE_ERROR)."""
+        if self.err is not None:
+            raise self.err
+
+
+def raise_or_record(err: Optional[ErrBox], code: Code, message: str,
+                    cause: Optional[BaseException] = None) -> None:
+    """Report an error through the active channel (raise vs record)."""
+    e = ReproError(code, message, cause)
+    if err is None:
+        raise e
+    err.err = e
+
+
+def guard(err: Optional[ErrBox]):
+    """Decorator-free helper: context manager converting exceptions into the
+    dual-channel protocol.  Usage::
+
+        with guard(err) as g:
+            ...risky...
+        if g.failed: return None
+    """
+    return _Guard(err)
+
+
+class _Guard:
+    def __init__(self, err: Optional[ErrBox]):
+        self._err = err
+        self.failed = False
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc is None:
+            return False
+        self.failed = True
+        if isinstance(exc, ReproError):
+            if self._err is None:
+                return False  # propagate
+            self._err.err = exc
+            return True
+        # Wrap foreign exceptions (XLA, ValueError, ...) like cf4ocl wraps
+        # OpenCL status codes.
+        code = Code.COMPILE_FAILURE if "xla" in type(exc).__module__.lower() \
+            else Code.INVALID_VALUE
+        wrapped = ReproError(code, f"{type(exc).__name__}: {exc}", exc)
+        if self._err is None:
+            raise wrapped from exc
+        self._err.err = wrapped
+        return True
+
+
+__all__ = [
+    "Code", "ReproError", "ErrBox", "err_string", "explain_xla_error",
+    "raise_or_record", "guard",
+]

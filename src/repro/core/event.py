@@ -1,0 +1,101 @@
+"""Event objects — ``CCLEvent`` analogue.
+
+An event brackets one enqueued operation: name (settable, cf.
+``ccl_event_set_name``), the queue it belongs to, and its instants
+(submit/start/end, host monotonic clock in nanoseconds).
+
+Hardware adaptation note (DESIGN.md §8.1): OpenCL events carry *device*
+timestamps; without a physical TPU the instants here are host wall-clock
+brackets around JAX's async dispatch.  Ends are resolved lazily: an event
+may hold unfinished outputs, and ``complete()`` (called by queue finish or
+the profiler) blocks on them and stamps the end instant.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+
+from .wrapper import Wrapper
+
+
+def now_ns() -> int:
+    return time.perf_counter_ns()
+
+
+class Event(Wrapper):
+    _counter = 0
+
+    def __init__(self, queue_name: str, command_type: str,
+                 name: Optional[str] = None):
+        Event._counter += 1
+        super().__init__(("evt", Event._counter))
+        self.queue_name = queue_name
+        self.command_type = command_type        # e.g. NDRANGE_KERNEL, READ_BUFFER
+        self.name = name or command_type        # aggregation key
+        self.t_submit: int = now_ns()
+        self.t_start: Optional[int] = None
+        self.t_end: Optional[int] = None
+        self._outputs: Any = None               # arrays to block on
+
+    # -- lifecycle used by DispatchQueue -------------------------------------
+    def mark_start(self) -> None:
+        self.t_start = now_ns()
+
+    def attach_outputs(self, outputs: Any) -> None:
+        self._outputs = outputs
+
+    def mark_end(self) -> None:
+        self.t_end = now_ns()
+
+    def complete(self) -> None:
+        """Block until the operation finished and stamp the end instant."""
+        if self.t_end is not None:
+            return
+        if self._outputs is not None:
+            try:
+                jax.block_until_ready(self._outputs)
+            except Exception:  # noqa: BLE001 — donated-away buffers: the op
+                pass           # they belonged to has necessarily completed
+            self._outputs = None
+        self.t_end = now_ns()
+
+    def try_complete(self) -> bool:
+        """Stamp the end instant iff the outputs are already ready
+        (non-blocking) — called opportunistically by the queue so event
+        spans track actual completion instead of the next fence."""
+        if self.t_end is not None:
+            return True
+        if self._outputs is None:
+            self.t_end = now_ns()
+            return True
+        try:
+            ready = all(x.is_ready() for x in jax.tree.leaves(self._outputs)
+                        if hasattr(x, "is_ready"))
+        except Exception:  # noqa: BLE001 — deleted/donated ⇒ finished
+            ready = True
+        if ready:
+            self._outputs = None
+            self.t_end = now_ns()
+        return ready
+
+    # -- queries ---------------------------------------------------------------
+    def set_name(self, name: str) -> "Event":
+        """``ccl_event_set_name`` analogue."""
+        self.name = name
+        return self
+
+    @property
+    def duration_ns(self) -> Optional[int]:
+        if self.t_start is None or self.t_end is None:
+            return None
+        return self.t_end - self.t_start
+
+    def __repr__(self) -> str:
+        return (f"<Event {self.name!r} q={self.queue_name} "
+                f"dur={self.duration_ns}>")
+
+
+__all__ = ["Event", "now_ns"]

@@ -1,0 +1,163 @@
+"""Static HLO analysis — the ``ccl_c`` "kernel analyzer" heart.
+
+Parses compiled (post-SPMD-partitioning) HLO text and extracts:
+
+* per-collective-kind instruction counts and **per-device operand bytes**
+  (``all-gather``/``all-reduce``/``reduce-scatter``/``all-to-all``/
+  ``collective-permute``) — XLA's ``cost_analysis()`` does not report
+  collective traffic, so this is the only source for the roofline's
+  collective term;
+* fusion/remat indicators (duplicate op-name counts) used by the §Perf
+  iteration loop.
+
+Shapes in post-partitioning HLO are already per-device, so all byte counts
+here are per-device quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict, Iterable, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f4e2m1fn": 1, "f8e8m0fnu": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*[a-z0-9]*)\[([\d,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+# matches e.g. "  %all-reduce.7 = bf16[64,128]{1,0} all-reduce(...)",
+# including "-start" async forms; "-done" forms carry no new traffic.
+_COLL_LINE_RE = re.compile(
+    r"=\s+(?P<result>[^=]+?)\s+(?P<kind>" + "|".join(COLLECTIVE_KINDS) +
+    r")(?:-start)?\((?P<rest>.*)$")
+_DONE_RE = re.compile(
+    r"\b(?:" + "|".join(COLLECTIVE_KINDS) + r")-done\b")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+# iota form: replica_groups=[num_groups,group_size]<=[N...]
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of every dtype[dims] literal occurring in ``type_str``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        bw = _DTYPE_BYTES.get(dt)
+        if bw is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * bw
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    def summary(self) -> str:
+        rows = [f"  {k:22s} n={self.counts[k]:4d}  "
+                f"{self.bytes_by_kind[k] / 1e6:12.3f} MB"
+                for k in sorted(self.counts)]
+        rows.append(f"  {'TOTAL':22s} n={self.total_count:4d}  "
+                    f"{self.total_bytes / 1e6:12.3f} MB")
+        return "\n".join(rows)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic from post-partitioning HLO.
+
+    Post-optimization HLO prints operands as bare names, so traffic is
+    derived from the RESULT type + replica-group size g (ring model):
+
+        all-gather          recv (g-1)/g × result         ≈ result
+        all-to-all          send+recv ≈ result
+        collective-permute  result
+        all-reduce          2 × (g-1)/g × result          ≈ 2 × result
+        reduce-scatter      operand = g × result → (g-1) × result
+    """
+    counts: Dict[str, int] = defaultdict(int)
+    nbytes: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if _DONE_RE.search(line):
+            continue
+        m = _COLL_LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        counts[kind] += 1
+        rbytes = shape_bytes(m.group("result"))
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            g = int(gi.group(2)) if gi else 0
+        if kind == "all-reduce":
+            traffic = 2 * rbytes * (g - 1) // g if g > 1 else \
+                (2 * rbytes if g != 1 else 0)
+        elif kind == "reduce-scatter":
+            traffic = rbytes * (g - 1) if g > 1 else rbytes
+        elif kind == "all-gather":
+            traffic = rbytes * (g - 1) // g if g > 1 else rbytes
+        else:
+            traffic = rbytes
+        nbytes[kind] += traffic
+    return CollectiveStats(dict(counts), dict(nbytes))
+
+
+_OPCODE_RE = re.compile(r"=\s+[^\s]+\s+([a-z][a-z0-9-]*)[\(.]")
+
+
+def opcode_histogram(hlo_text: str) -> Counter:
+    hist: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _OPCODE_RE.search(line)
+        if m:
+            hist[m.group(1)] += 1
+    return hist
+
+
+def fusion_stats(hlo_text: str) -> Dict[str, int]:
+    """Indicators used by the perf loop: counts of fusions, reshapes/copies
+    (layout churn), and convert ops (precision churn)."""
+    hist = opcode_histogram(hlo_text)
+    return {
+        "fusion": hist.get("fusion", 0),
+        "reshape": hist.get("reshape", 0),
+        "transpose": hist.get("transpose", 0),
+        "copy": hist.get("copy", 0),
+        "convert": hist.get("convert", 0),
+        "while": hist.get("while", 0),
+        "custom-call": hist.get("custom-call", 0),
+    }
+
+
+__all__ = ["collective_stats", "CollectiveStats", "opcode_histogram",
+           "fusion_stats", "shape_bytes", "COLLECTIVE_KINDS"]

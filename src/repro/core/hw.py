@@ -1,0 +1,67 @@
+"""Target-hardware constant tables.
+
+cf4ocl reads device capabilities through ``clGetDeviceInfo``; on this
+container the runtime devices are CPU stand-ins, so the *target* TPU
+capabilities come from a static spec table keyed by device kind.  The
+roofline engine (launch/rooofline) and ``Kernel.suggest_batching`` read from
+here — never hard-code these numbers elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float      # FLOP/s per chip
+    hbm_bandwidth: float        # bytes/s per chip
+    hbm_bytes: int              # HBM capacity per chip
+    ici_link_bandwidth: float   # bytes/s per ICI link
+    ici_links: int              # usable ICI links per chip (torus degree)
+    vmem_bytes: int             # per-core VMEM
+    mxu_dim: int = 128          # systolic array edge
+    vpu_lanes: int = 128        # vector lanes
+    vpu_sublanes: int = 8
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    vmem_bytes=128 * 1024**2,
+)
+
+# CPU stand-in numbers only used so host runs produce finite estimates.
+CPU_HOST = ChipSpec(
+    name="cpu-host",
+    peak_bf16_flops=0.5e12,
+    hbm_bandwidth=50e9,
+    hbm_bytes=64 * 1024**3,
+    ici_link_bandwidth=10e9,
+    ici_links=1,
+    vmem_bytes=32 * 1024**2,
+)
+
+SPECS = {"tpu-v5e": TPU_V5E, "cpu-host": CPU_HOST}
+
+
+def spec_for(device_kind: str) -> ChipSpec:
+    k = device_kind.lower()
+    if "tpu" in k and "v5" in k:
+        return TPU_V5E
+    if "cpu" in k or "host" in k:
+        # Target platform for this repo is v5e; CPU devices are placeholders
+        # for AOT analysis, so analysis paths use the TARGET spec and
+        # execution paths use CPU_HOST.  Callers choose explicitly.
+        return CPU_HOST
+    return TPU_V5E
+
+
+TARGET = TPU_V5E
+
+__all__ = ["ChipSpec", "TPU_V5E", "CPU_HOST", "SPECS", "spec_for", "TARGET"]

@@ -1,0 +1,118 @@
+"""Kernel wrapper — ``CCLKernel`` analogue.
+
+Wraps an executable (AOT-compiled or eagerly jitted) step function.  The
+headline cf4ocl feature reproduced here is ``suggest_worksizes`` →
+:func:`suggest_batching`: given a requested problem size and the device's
+capabilities, pick hardware-legal tile/grid sizes.  On TPU that means
+respecting the VPU register shape (8×128), MXU edge (128), and the VMEM
+working-set budget, instead of OpenCL work-group limits.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional, Tuple
+
+from .context import Context
+from .device import Device
+from .errors import Code, ErrBox, guard, raise_or_record
+from .wrapper import Wrapper
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def suggest_batching(real_size: int, device: Device,
+                     bytes_per_item: int = 8,
+                     vmem_fraction: float = 0.5,
+                     err: Optional[ErrBox] = None) -> Tuple[int, int]:
+    """Pick (global_size, block_size) for a 1-D elementwise workload.
+
+    The cf4ocl contract: ``gws`` is the padded global size (multiple of the
+    block), ``lws`` the per-block size adapted to the device.  TPU
+    adaptation: a block is a (sublanes×lanes)-aligned chunk small enough
+    that ``block × bytes_per_item`` fits the VMEM budget.
+    """
+    with guard(err) as g:
+        if real_size <= 0:
+            raise_or_record(None, Code.INVALID_VALUE,
+                            f"real_size must be positive, got {real_size}")
+        spec = device.target_spec
+        lane_quantum = spec.vpu_sublanes * spec.vpu_lanes  # 1024
+        budget = int(spec.vmem_bytes * vmem_fraction)
+        max_block = max(lane_quantum, (budget // max(1, bytes_per_item))
+                        // lane_quantum * lane_quantum)
+        block = min(round_up(real_size, lane_quantum), max_block)
+        # keep blocks a power-of-two multiple of the quantum for clean grids
+        pow2 = 1 << (block // lane_quantum).bit_length() - 1 if block >= lane_quantum else 1
+        block = max(lane_quantum, pow2 * lane_quantum)
+        block = min(block, max_block)
+        gws = round_up(real_size, block)
+        return gws, block
+    return 0, 0
+
+
+def suggest_matmul_tiles(m: int, n: int, k: int, device: Device,
+                         dtype_bytes: int = 2) -> Tuple[int, int, int]:
+    """MXU-aligned (bm, bn, bk) tile suggestion with the three operands'
+    working set fitting in half of VMEM (double-buffering headroom)."""
+    spec = device.target_spec
+    edge = spec.mxu_dim
+    budget = spec.vmem_bytes // 2
+
+    def ws(bm, bn, bk):
+        return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+    bm = min(round_up(m, edge), 512)
+    bn = min(round_up(n, edge), 512)
+    bk = min(round_up(k, edge), 2048)
+    while ws(bm, bn, bk) > budget and bk > edge:
+        bk //= 2
+    while ws(bm, bn, bk) > budget and (bm > edge or bn > edge):
+        if bm >= bn and bm > edge:
+            bm //= 2
+        elif bn > edge:
+            bn //= 2
+    return max(bm, edge), max(bn, edge), max(bk, edge)
+
+
+class Kernel(Wrapper):
+    _counter = 0
+
+    def __init__(self, context: Context, executable: Callable,
+                 name: str = "kernel", program=None):
+        Kernel._counter += 1
+        super().__init__(("kern", Kernel._counter))
+        self.context = context
+        self.executable = executable
+        self.name = name
+        self.program = program
+        self._fixed_args: dict = {}
+
+    # -- cf4ocl-style argument pre-binding -----------------------------------
+    def set_arg(self, key: str, value: Any) -> "Kernel":
+        """Pre-bind a keyword argument (``ccl_kernel_set_arg`` for the fixed
+        arguments that stay constant across invocations, like the paper's
+        RNG kernel's ``nseeds``)."""
+        self._fixed_args[key] = value
+        return self
+
+    def __call__(self, *args, **kwargs):
+        merged = {**self._fixed_args, **kwargs}
+        return self.executable(*args, **merged)
+
+    def enqueue(self, queue, *args, name: Optional[str] = None,
+                err: Optional[ErrBox] = None, **kwargs):
+        """``ccl_kernel_set_args_and_enqueue_ndrange`` analogue: submit on a
+        queue, recording a named event."""
+        return queue.enqueue(self, *args, name=name or self.name, err=err,
+                             **kwargs)
+
+    def suggest_batching(self, real_size: int, device: Optional[Device] = None,
+                         **kw) -> Tuple[int, int]:
+        dev = device or self.context.device(0)
+        return suggest_batching(real_size, dev, **kw)
+
+
+__all__ = ["Kernel", "suggest_batching", "suggest_matmul_tiles", "round_up"]

@@ -1,0 +1,59 @@
+"""Platforms module — manage the set of available backends.
+
+cf4ocl distinguishes the *platforms module* (operates on the set of all
+platforms in the system) from the *platform wrapper* (one platform object).
+In JAX the analogue of an OpenCL platform is a backend ("cpu", "tpu",
+"gpu"); this module enumerates them and exposes per-platform device lists.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+
+from .errors import Code, ErrBox, raise_or_record
+from .wrapper import Wrapper
+
+
+class Platform(Wrapper):
+    """Wrapper over a backend name + its device list."""
+
+    def __init__(self, raw: str):
+        super().__init__(raw)
+        self._info_queries = {
+            "NAME": lambda b: b,
+            "VENDOR": lambda b: "Google/XLA",
+            "VERSION": lambda b: f"jax {jax.__version__}",
+            "NUM_DEVICES": lambda b: len(jax.devices(b)),
+        }
+
+    @property
+    def name(self) -> str:
+        return self._raw
+
+    def devices(self):
+        from .device import Device
+        return [Device.wrap(d) for d in jax.devices(self._raw)]
+
+
+def available_platforms(err: Optional[ErrBox] = None) -> List[Platform]:
+    """Enumerate backends with at least one device."""
+    names = []
+    for cand in ("tpu", "gpu", "cpu"):
+        try:
+            if jax.devices(cand):
+                names.append(cand)
+        except RuntimeError:
+            continue
+    if not names:
+        raise_or_record(err, Code.DEVICE_NOT_FOUND, "No usable jax backend")
+        return []
+    return [Platform.wrap(n) for n in names]
+
+
+def platform_info() -> Dict[str, int]:
+    return {p.name: p.get_info("NUM_DEVICES") for p in available_platforms()}
+
+
+__all__ = ["Platform", "available_platforms", "platform_info"]

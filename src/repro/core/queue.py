@@ -1,0 +1,145 @@
+"""Dispatch queue — ``CCLQueue`` analogue.
+
+An ordered lane on which operations (compiled steps, host↔device copies)
+are submitted.  If created with ``profiling=True`` the queue records an
+:class:`~repro.core.event.Event` for every submission and keeps the full
+event list, so a profiler can be handed whole queues afterwards — this is
+cf4ocl's headline ergonomic win over raw OpenCL, where the developer must
+retain and query every event object manually.
+
+JAX's async dispatch supplies the concurrency: ``enqueue`` returns as soon
+as the computation is dispatched; ``finish`` blocks (``clFinish``).
+Two queues used from two host threads genuinely overlap compute with
+host transfers, which is exactly the structure of the paper's PRNG example.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional
+
+import jax
+
+from .context import Context
+from .errors import Code, ErrBox, guard, raise_or_record
+from .event import Event
+from .wrapper import Wrapper
+
+
+class DispatchQueue(Wrapper):
+    _counter = 0
+
+    def __init__(self, context: Context, name: Optional[str] = None,
+                 profiling: bool = True):
+        DispatchQueue._counter += 1
+        super().__init__(("queue", DispatchQueue._counter))
+        self.context = context
+        self.name = name or f"q{DispatchQueue._counter}"
+        self.profiling = profiling
+        self._events: List[Event] = []
+        self._lock = threading.Lock()
+        self._last_outputs: Any = None
+
+    # -- submission -------------------------------------------------------
+    def enqueue(self, fn: Callable[..., Any], *args,
+                name: Optional[str] = None,
+                command_type: str = "NDRANGE_KERNEL",
+                err: Optional[ErrBox] = None, **kwargs) -> Any:
+        """Submit ``fn(*args, **kwargs)`` on this lane.
+
+        Returns the (possibly not-yet-ready) outputs.  The recorded event is
+        retrievable as ``queue.events[-1]`` and is named for aggregation.
+        """
+        evt = Event(self.name, command_type, name) if self.profiling else None
+        with guard(err) as g:
+            # opportunistically close out recently finished events so their
+            # spans reflect completion, not the next blocking fence
+            with self._lock:
+                recent = [e for e in self._events[-8:] if e.t_end is None]
+            for e in recent:
+                e.try_complete()
+            if evt:
+                evt.mark_start()
+            out = fn(*args, **kwargs)
+            if evt:
+                evt.attach_outputs(out)
+                with self._lock:
+                    self._events.append(evt)
+            self._last_outputs = out
+            return out
+        return None
+
+    def enqueue_read(self, buffer, blocking: bool = True,
+                     name: Optional[str] = None,
+                     err: Optional[ErrBox] = None):
+        """Device→host transfer (``clEnqueueReadBuffer`` analogue)."""
+        import numpy as np
+        evt = Event(self.name, "READ_BUFFER", name) if self.profiling else None
+        with guard(err) as g:
+            if evt:
+                evt.mark_start()
+            arr = buffer.array
+            if blocking:
+                host = np.asarray(jax.device_get(arr))
+                if evt:
+                    evt.mark_end()
+                    with self._lock:
+                        self._events.append(evt)
+                return host
+            fut = arr.copy_to_host_async() if hasattr(arr, "copy_to_host_async") else None
+            if evt:
+                evt.attach_outputs(arr)
+                with self._lock:
+                    self._events.append(evt)
+            return fut if fut is not None else arr
+        return None
+
+    def enqueue_write(self, buffer, host_array,
+                      name: Optional[str] = None,
+                      err: Optional[ErrBox] = None):
+        """Host→device transfer (``clEnqueueWriteBuffer`` analogue)."""
+        evt = Event(self.name, "WRITE_BUFFER", name) if self.profiling else None
+        with guard(err) as g:
+            if evt:
+                evt.mark_start()
+            buffer.put(host_array)
+            if evt:
+                evt.attach_outputs(buffer.array)
+                with self._lock:
+                    self._events.append(evt)
+            return buffer
+        return None
+
+    # -- synchronization ----------------------------------------------------
+    def finish(self, err: Optional[ErrBox] = None) -> None:
+        """``clFinish``: block until every submitted op completed; stamps all
+        pending event end-instants."""
+        with guard(err) as g:
+            with self._lock:
+                pending = [e for e in self._events if e.t_end is None]
+            for e in pending:
+                e.complete()
+            if self._last_outputs is not None:
+                jax.block_until_ready(self._last_outputs)
+                self._last_outputs = None
+            return None
+
+    # -- event access (used by the profiler) ---------------------------------
+    @property
+    def events(self) -> List[Event]:
+        with self._lock:
+            return list(self._events)
+
+    def reset_events(self) -> None:
+        with self._lock:
+            self._events.clear()
+
+    def _release(self) -> None:
+        self.finish()
+        for e in self.events:
+            if e._refcount > 0:
+                e.destroy()
+        self.reset_events()
+
+
+__all__ = ["DispatchQueue"]

@@ -1,0 +1,149 @@
+"""The ``CCLWrapper`` analogue — common machinery for all wrapper classes.
+
+Responsibilities mirrored from cf4ocl §4.2:
+
+a) wrapping/unwrapping of raw objects while maintaining a **one-to-one**
+   relationship between wrapped and wrapper objects (``wrap`` returns the
+   same wrapper for the same raw object);
+b) lifecycle management — constructor/destructor pairing with reference
+   counts and a global :func:`memcheck` that verifies no wrapper leaked
+   (``ccl_wrapper_memcheck`` analogue, used by tests and examples);
+c) information handling — a uniform, cached ``get_info`` protocol replacing
+   the many ``clGet*Info`` calls and their intermediate allocations.
+"""
+
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Any, Callable, ClassVar, Dict, Optional
+
+from .errors import Code, ErrBox, raise_or_record
+
+_registry_lock = threading.RLock()
+
+
+class Wrapper:
+    """Abstract base wrapper.
+
+    Subclasses set ``_wrap_key(raw)`` if identity of the raw object is not
+    plain ``id()``-stable (e.g. jax Devices are singletons so ``id`` works).
+    """
+
+    # class-level: raw-key -> wrapper instance (per concrete class)
+    _instances: ClassVar[Dict[Any, "Wrapper"]]
+    # class-level new/destroy counters for memcheck
+    _live: ClassVar[int]
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        cls._instances = {}
+        cls._live = 0
+
+    def __init__(self, raw: Any):
+        self._raw = raw
+        self._refcount = 1
+        self._info_cache: Dict[Any, Any] = {}
+        with _registry_lock:
+            type(self)._instances[self._key(raw)] = self
+            type(self)._live += 1
+
+    # -- identity ---------------------------------------------------------
+    @staticmethod
+    def _key(raw: Any) -> Any:
+        try:
+            hash(raw)
+            return raw
+        except TypeError:
+            return id(raw)
+
+    @classmethod
+    def wrap(cls, raw: Any) -> "Wrapper":
+        """Return the unique wrapper for ``raw`` (creating it if needed).
+
+        Objects obtained this way follow cf4ocl's rule: wrappers returned by
+        *non-constructor* methods are reference-bumped internally and must
+        not be destroyed by client code unless it owns a new().
+        """
+        with _registry_lock:
+            w = cls._instances.get(cls._key(raw))
+            if w is not None:
+                return w
+        return cls(raw)
+
+    def unwrap(self) -> Any:
+        """Raw object access — cf4ocl always keeps raw OpenCL objects
+        reachable so client code can mix framework and raw API calls."""
+        return self._raw
+
+    # -- lifecycle --------------------------------------------------------
+    def ref(self) -> "Wrapper":
+        with _registry_lock:
+            self._refcount += 1
+        return self
+
+    def destroy(self) -> None:
+        """Destructor — must pair with the constructor (or ``ref``)."""
+        with _registry_lock:
+            self._refcount -= 1
+            if self._refcount > 0:
+                return
+            type(self)._instances.pop(self._key(self._raw), None)
+            type(self)._live -= 1
+        self._release()
+
+    def _release(self) -> None:
+        """Subclass hook to free raw resources."""
+
+    # -- info handling ----------------------------------------------------
+    def get_info(self, key: Any, query: Optional[Callable[[Any], Any]] = None,
+                 err: Optional[ErrBox] = None) -> Any:
+        """Cached info query (the clGet*Info replacement).
+
+        ``query`` computes the value from the raw object on first access;
+        subclasses usually pre-register queries in ``_info_queries``.
+        """
+        if key in self._info_cache:
+            return self._info_cache[key]
+        fn = query or getattr(self, "_info_queries", {}).get(key)
+        if fn is None:
+            raise_or_record(err, Code.INVALID_VALUE,
+                            f"No info query registered for key {key!r} on "
+                            f"{type(self).__name__}")
+            return None
+        try:
+            val = fn(self._raw)
+        except Exception as e:  # noqa: BLE001 — uniform info failure path
+            raise_or_record(err, Code.INVALID_VALUE,
+                            f"Info query {key!r} failed: {e}", e)
+            return None
+        self._info_cache[key] = val
+        return val
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} raw={self._raw!r} rc={self._refcount}>"
+
+
+def live_wrappers() -> Dict[str, int]:
+    """Per-class count of live wrappers."""
+    with _registry_lock:
+        out = {}
+        for cls in _all_wrapper_classes(Wrapper):
+            if getattr(cls, "_live", 0):
+                out[cls.__name__] = cls._live
+        return out
+
+
+def _all_wrapper_classes(base):
+    for sub in base.__subclasses__():
+        yield sub
+        yield from _all_wrapper_classes(sub)
+
+
+def memcheck() -> bool:
+    """``ccl_wrapper_memcheck`` analogue — True iff every constructed wrapper
+    has been destroyed."""
+    return not live_wrappers()
+
+
+__all__ = ["Wrapper", "memcheck", "live_wrappers"]

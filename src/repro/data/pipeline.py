@@ -1,0 +1,73 @@
+"""Synthetic data pipeline driven by the paper's PRNG kernels.
+
+The paper's example app is "massive PRNG feeding a consumer through
+pipes"; here the consumer is the training loop.  The pipeline runs the
+Wang-hash/xorshift kernels on-device, maps the high plane to token IDs,
+and double-buffers batches on a dedicated DispatchQueue so generation of
+batch t+1 overlaps the train step on batch t — the paper's two-queue
+structure applied to input pipelines.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.context import Context
+from ..core.queue import DispatchQueue
+from ..kernels.xorshift_prng import ops as prng
+
+
+class TokenStream:
+    """Iterator of {"tokens","labels"} batches of (batch, seq) int32."""
+
+    def __init__(self, batch: int, seq: int, vocab: int,
+                 context: Optional[Context] = None,
+                 use_pallas: bool = True,
+                 prefetch: int = 2,
+                 cycle: int = 0):
+        """``cycle > 0``: pre-generate that many batches and loop over them
+        (a finite epoch — gives tests/demos a memorizable signal)."""
+        self.batch, self.seq, self.vocab = batch, seq, vocab
+        self.n = batch * (seq + 1)
+        self.use_pallas = use_pallas
+        self.state = prng.prng_init(self.n, use_pallas=use_pallas)
+        self.context = context
+        self.queue = DispatchQueue(context, "DataGen") if context else None
+        self._buf: list = []
+        self._lock = threading.Lock()
+        self.prefetch = prefetch
+        self.cycle = cycle
+        self._cycle_cache: list = []
+        self._idx = 0
+
+    def _gen(self) -> Dict[str, jax.Array]:
+        self.state = prng.prng_step(self.state, use_pallas=self.use_pallas)
+        toks = prng.to_tokens(self.state.hi, self.vocab)
+        flat = toks.reshape(-1)[: self.n].reshape(self.batch, self.seq + 1)
+        return {"tokens": flat[:, :-1], "labels": flat[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        if self.cycle:
+            if len(self._cycle_cache) < self.cycle:
+                self._cycle_cache.append(self._dispatch())
+            batch = self._cycle_cache[self._idx % self.cycle]
+            self._idx += 1
+            return batch
+        return self._dispatch()
+
+    def _dispatch(self) -> Dict[str, jax.Array]:
+        if self.queue is not None:
+            # enqueue generation as a named event (profiler-visible)
+            return self.queue.enqueue(self._gen, name="DATA_GEN",
+                                      command_type="NDRANGE_KERNEL")
+        return self._gen()
+
+
+__all__ = ["TokenStream"]

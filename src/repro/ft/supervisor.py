@@ -1,0 +1,165 @@
+"""Fault tolerance: heartbeats, straggler detection, restart supervision.
+
+On a real pod each host runs a ``Heartbeat`` reporter; the ``Supervisor``
+(on host 0 / a controller) watches arrival times, flags stragglers
+(arrival > straggler_factor × median), declares failures after
+``dead_after_s``, and drives the restart policy: halt collective work,
+restore from the last durable checkpoint, optionally **rescale** to the
+surviving device set (elastic: ckpt.restore onto the new mesh).
+
+This container has one host, so tests exercise the full logic with
+simulated clocks/workers (tests/test_ft.py) — the state machine is the
+deliverable; the transport (here: in-process queues) is pluggable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class WorkerState(enum.Enum):
+    HEALTHY = "healthy"
+    STRAGGLER = "straggler"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass
+class WorkerInfo:
+    worker_id: str
+    last_beat: float
+    last_step: int = -1
+    state: WorkerState = WorkerState.HEALTHY
+    step_times: List[float] = dataclasses.field(default_factory=list)
+
+
+class Supervisor:
+    def __init__(self, expected_workers: int,
+                 dead_after_s: float = 30.0,
+                 straggler_factor: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.expected = expected_workers
+        self.dead_after_s = dead_after_s
+        self.straggler_factor = straggler_factor
+        self.clock = clock
+        self.workers: Dict[str, WorkerInfo] = {}
+        self._lock = threading.Lock()
+        self.restarts = 0
+        self.events: List[tuple] = []
+
+    # -- heartbeat ingestion ------------------------------------------------
+    def beat(self, worker_id: str, step: int) -> None:
+        now = self.clock()
+        with self._lock:
+            w = self.workers.get(worker_id)
+            if w is None:
+                w = WorkerInfo(worker_id, now)
+                self.workers[worker_id] = w
+            if w.last_step >= 0 and step > w.last_step:
+                w.step_times.append(now - w.last_beat)
+                w.step_times = w.step_times[-32:]
+            w.last_beat = now
+            w.last_step = step
+            if w.state is not WorkerState.HEALTHY:
+                self.events.append(("recovered", worker_id, now))
+            w.state = WorkerState.HEALTHY
+
+    # -- monitoring -----------------------------------------------------------
+    def _median_step_time(self) -> Optional[float]:
+        times = [t for w in self.workers.values() for t in w.step_times]
+        if not times:
+            return None
+        times.sort()
+        return times[len(times) // 2]
+
+    def check(self) -> Dict[str, WorkerState]:
+        """Classify workers; call periodically."""
+        now = self.clock()
+        med = self._median_step_time()
+        with self._lock:
+            for w in self.workers.values():
+                silent = now - w.last_beat
+                if silent > self.dead_after_s:
+                    if w.state is not WorkerState.DEAD:
+                        self.events.append(("dead", w.worker_id, now))
+                    w.state = WorkerState.DEAD
+                elif med is not None and silent > self.straggler_factor * \
+                        max(med, 1e-3):
+                    if w.state is WorkerState.HEALTHY:
+                        self.events.append(("straggler", w.worker_id, now))
+                    w.state = WorkerState.STRAGGLER
+            return {k: w.state for k, w in self.workers.items()}
+
+    def healthy_count(self) -> int:
+        return sum(1 for w in self.workers.values()
+                   if w.state is WorkerState.HEALTHY)
+
+    def should_restart(self) -> bool:
+        """Any dead worker (or missing worker past deadline) → restart."""
+        states = self.check()
+        missing = self.expected - len(states)
+        return missing > 0 and self._any_beat_old() or \
+            any(s is WorkerState.DEAD for s in states.values())
+
+    def _any_beat_old(self) -> bool:
+        now = self.clock()
+        return all(now - w.last_beat > self.dead_after_s
+                   for w in self.workers.values()) if self.workers else False
+
+    def plan_restart(self, devices_per_worker: int = 8
+                     ) -> Dict[str, object]:
+        """Restart decision: surviving worker set + new mesh shape hint.
+
+        Elastic policy: keep the largest power-of-two worker count among
+        survivors so the mesh stays rectangular.
+        """
+        states = self.check()
+        alive = [k for k, s in states.items() if s is not WorkerState.DEAD]
+        n = 1
+        while n * 2 <= len(alive):
+            n *= 2
+        self.restarts += 1
+        return {
+            "survivors": sorted(alive)[:n],
+            "workers": n,
+            "devices": n * devices_per_worker,
+            "restart_index": self.restarts,
+        }
+
+
+class Heartbeat:
+    """Worker-side reporter (thread) — beats every ``interval_s``."""
+
+    def __init__(self, supervisor: Supervisor, worker_id: str,
+                 interval_s: float = 1.0):
+        self.sup = supervisor
+        self.worker_id = worker_id
+        self.interval_s = interval_s
+        self.step = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self):
+        while not self._stop.is_set():
+            self.sup.beat(self.worker_id, self.step)
+            self._stop.wait(self.interval_s)
+
+    def advance(self, step: int):
+        self.step = step
+        self.sup.beat(self.worker_id, step)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+
+
+__all__ = ["Supervisor", "Heartbeat", "WorkerState", "WorkerInfo"]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot-spots (paper device code + perf).
+
+Each kernel package ships <name>.py (pl.pallas_call + BlockSpec), ops.py
+(jit wrapper with XLA fallback) and ref.py (pure-jnp oracle).
+"""

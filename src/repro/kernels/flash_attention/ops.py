@@ -1,0 +1,37 @@
+"""Public op: flash_attention with XLA fallback.
+
+``impl="pallas"`` uses the BlockSpec'd TPU kernel (interpret-mode on CPU);
+``impl="xla"`` uses the jnp reference (what the dry-run lowers, since
+Pallas custom-calls don't lower to the CPU placeholder backend).  Model
+code selects via config; numerics agree to bf16 tolerance (tested).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "impl", "block_q", "block_kv"))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    impl: str = "pallas",
+                    block_q: int = 512, block_kv: int = 512):
+    if impl == "xla":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv, interpret=_INTERPRET)
+
+
+__all__ = ["flash_attention"]

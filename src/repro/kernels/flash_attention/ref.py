@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention.
+
+    q: (B, Hq, T, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0 (GQA).
+    ``window``: sliding-window size (a query attends to keys in
+    [i - window + 1, i]); None = full causal (or full bidirectional if
+    causal=False).
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    # positions: queries at rows S-T..S-1 when T < S (decode), aligned ends
+    qpos = jnp.arange(T) + (S - T)
+    kpos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.nan_to_num(jnp.exp(
+        logits - logits.max(-1, keepdims=True)))
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+__all__ = ["attention_ref"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for fused RMSNorm (optionally with +1 gamma, Gemma-style)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+                plus_one: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    scale = (w.astype(jnp.float32) + 1.0) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(x.dtype)
+
+
+__all__ = ["rmsnorm_ref"]

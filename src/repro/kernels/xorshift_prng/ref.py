@@ -1,0 +1,127 @@
+"""Pure-jnp oracle for the paper's PRNG kernels (Listings S4/S5).
+
+The OpenCL kernels operate on 64-bit state (``ulong``).  TPUs have no
+64-bit integer datapath, so the TPU-native representation is a pair of
+uint32 planes ``(hi, lo)`` (DESIGN.md §8 hardware adaptation).  This oracle
+implements the exact same (hi, lo) arithmetic in pure jnp — and the test
+suite additionally cross-checks it against a numpy uint64 implementation of
+the original kernel, so the pair-arithmetic itself is verified against the
+paper's 64-bit semantics.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+# -- Listing S4: init kernel (Jenkins hash for low bits, Wang hash for high) --
+
+def jenkins_hash_u32(a):
+    """Bob Jenkins' 6-shift integer hash — the paper's 'low bits' scramble."""
+    a = (a + jnp.uint32(0x7ED55D16)) + (a << 12)
+    a = (a ^ jnp.uint32(0xC761C23C)) ^ (a >> 19)
+    a = (a + jnp.uint32(0x165667B1)) + (a << 5)
+    a = (a + jnp.uint32(0xD3A2646C)) ^ (a << 9)
+    a = (a + jnp.uint32(0xFD7046C5)) + (a << 3)
+    a = (a - jnp.uint32(0xB55A4F09)) - (a >> 16)
+    return a
+
+
+def wang_hash_u32(a):
+    """Wang integer hash — the paper's 'high bits' scramble."""
+    a = (a ^ jnp.uint32(61)) ^ (a >> 16)
+    a = a + (a << 3)
+    a = a ^ (a >> 4)
+    a = a * jnp.uint32(0x27D4EB2D)
+    a = a ^ (a >> 15)
+    return a
+
+
+def init_ref(gids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Seed (hi, lo) planes from global IDs — Listing S4 semantics:
+    ``final.x`` (low) = jenkins(gid); ``final.y`` (high) = wang(final.x)."""
+    gids = gids.astype(U32)
+    lo = jenkins_hash_u32(gids)
+    hi = wang_hash_u32(lo)
+    return hi, lo
+
+
+# -- 64-bit ops on (hi, lo) uint32 pairs ---------------------------------------
+
+def _shl64(hi, lo, k: int):
+    if k == 0:
+        return hi, lo
+    if k >= 32:
+        return (lo << (k - 32)) if k > 32 else lo, jnp.zeros_like(lo)
+    return (hi << k) | (lo >> (32 - k)), lo << k
+
+
+def _shr64(hi, lo, k: int):
+    if k == 0:
+        return hi, lo
+    if k >= 32:
+        return jnp.zeros_like(hi), (hi >> (k - 32)) if k > 32 else hi
+    return hi >> k, (lo >> k) | (hi << (32 - k))
+
+
+def xorshift64_pair(hi, lo):
+    """One xorshift step (Listing S5): s^=s<<21; s^=s>>35; s^=s<<4."""
+    h, l = _shl64(hi, lo, 21)
+    hi, lo = hi ^ h, lo ^ l
+    h, l = _shr64(hi, lo, 35)
+    hi, lo = hi ^ h, lo ^ l
+    h, l = _shl64(hi, lo, 4)
+    hi, lo = hi ^ h, lo ^ l
+    return hi, lo
+
+
+def rng_ref(hi: jnp.ndarray, lo: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Listing S5 semantics on (hi, lo) planes."""
+    return xorshift64_pair(hi.astype(U32), lo.astype(U32))
+
+
+# -- numpy uint64 ground truth (the paper's exact device code) -----------------
+
+def init_ref_np64(gids: np.ndarray) -> np.ndarray:
+    """Original Listing S4 on numpy uint32→uint64 (ground truth)."""
+    with np.errstate(over="ignore"):
+        a = gids.astype(np.uint32)
+        a = (a + np.uint32(0x7ED55D16)) + (a << np.uint32(12))
+        a = (a ^ np.uint32(0xC761C23C)) ^ (a >> np.uint32(19))
+        a = (a + np.uint32(0x165667B1)) + (a << np.uint32(5))
+        a = (a + np.uint32(0xD3A2646C)) ^ (a << np.uint32(9))
+        a = (a + np.uint32(0xFD7046C5)) + (a << np.uint32(3))
+        a = (a - np.uint32(0xB55A4F09)) - (a >> np.uint32(16))
+        lo = a
+        a = (a ^ np.uint32(61)) ^ (a >> np.uint32(16))
+        a = a + (a << np.uint32(3))
+        a = a ^ (a >> np.uint32(4))
+        a = a * np.uint32(0x27D4EB2D)
+        a = a ^ (a >> np.uint32(15))
+        hi = a
+    return (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+
+
+def rng_ref_np64(state: np.ndarray) -> np.ndarray:
+    """Original Listing S5 xorshift on numpy uint64 (ground truth)."""
+    s = state.astype(np.uint64)
+    s = s ^ (s << np.uint64(21))
+    s = s ^ (s >> np.uint64(35))
+    s = s ^ (s << np.uint64(4))
+    return s
+
+
+def pair_to_u64(hi, lo) -> np.ndarray:
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | \
+        np.asarray(lo, np.uint64)
+
+
+__all__ = ["init_ref", "rng_ref", "init_ref_np64", "rng_ref_np64",
+           "xorshift64_pair", "jenkins_hash_u32", "wang_hash_u32",
+           "pair_to_u64"]

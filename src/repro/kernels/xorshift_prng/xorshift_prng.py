@@ -1,0 +1,147 @@
+"""Pallas TPU kernels for the paper's massive PRNG (Listings S4/S5).
+
+Hardware adaptation (DESIGN.md §2, §8):
+
+* OpenCL work-item-per-value → 8×128 VPU vector lanes per block; the grid
+  iterates over row-blocks of a ``(rows, 128)`` state layout.
+* ``ulong`` 64-bit state → two uint32 planes ``(hi, lo)`` since the TPU
+  vector unit has no 64-bit integer lanes; all shifts/xors are expressed as
+  32-bit pair arithmetic (verified against a numpy uint64 oracle in tests).
+* BlockSpec keeps each block in VMEM: a ``(block_rows, 128)`` uint32 tile
+  ×3 live planes ≈ ``block_rows*128*4*3`` bytes — block_rows=512 ⇒ 768 KiB,
+  comfortably inside the 128 MiB v5e VMEM even with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 512
+
+_J1, _J2, _J3 = 0x7ED55D16, 0xC761C23C, 0x165667B1
+_J4, _J5, _J6 = 0xD3A2646C, 0xFD7046C5, 0xB55A4F09
+_W1, _W2 = 61, 0x27D4EB2D
+
+
+def _u32(x: int):
+    return jnp.uint32(x)
+
+
+# ---------------------------------------------------------------- init ------
+
+def _init_kernel(nseeds_ref, hi_ref, lo_ref, *, block_rows: int):
+    """Listing S4: seed from hashed global IDs.
+
+    Each grid step covers a (block_rows, LANES) tile; the global ID of an
+    element is its linear index in the full (rows, LANES) array.
+    """
+    pid = pl.program_id(0)
+    base = (pid * block_rows * LANES).astype(jnp.uint32)
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANES), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANES), 1)
+    gid = base + rows * _u32(LANES) + cols
+
+    # Guard like the paper's `if (gid < nseeds)`: lanes past the real work
+    # size get a zero seed (they are trimmed by the wrapper anyway).
+    nseeds = nseeds_ref[0]
+
+    # Jenkins hash → low bits
+    a = gid
+    a = (a + _u32(_J1)) + (a << 12)
+    a = (a ^ _u32(_J2)) ^ (a >> 19)
+    a = (a + _u32(_J3)) + (a << 5)
+    a = (a + _u32(_J4)) ^ (a << 9)
+    a = (a + _u32(_J5)) + (a << 3)
+    a = (a - _u32(_J6)) - (a >> 16)
+    lo = a
+    # Wang hash → high bits
+    a = (a ^ _u32(_W1)) ^ (a >> 16)
+    a = a + (a << 3)
+    a = a ^ (a >> 4)
+    a = a * _u32(_W2)
+    a = a ^ (a >> 15)
+    hi = a
+
+    live = gid < nseeds
+    hi_ref[...] = jnp.where(live, hi, _u32(0))
+    lo_ref[...] = jnp.where(live, lo, _u32(0))
+
+
+def init_pallas(nseeds: int, rows: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Run the init kernel over a (rows, LANES) grid; returns (hi, lo)."""
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    out_shape = jax.ShapeDtypeStruct((rows, LANES), jnp.uint32)
+    blockspec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    kernel = functools.partial(_init_kernel, block_rows=block_rows)
+    hi, lo = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=(blockspec, blockspec),
+        out_shape=(out_shape, out_shape),
+        interpret=interpret,
+    )(jnp.array([nseeds], jnp.uint32))
+    return hi, lo
+
+
+# ---------------------------------------------------------------- rng -------
+
+def _shl64(hi, lo, k: int):
+    if k >= 32:
+        return lo << (k - 32) if k > 32 else lo, jnp.zeros_like(lo)
+    return (hi << k) | (lo >> (32 - k)), lo << k
+
+
+def _shr64(hi, lo, k: int):
+    if k >= 32:
+        return jnp.zeros_like(hi), hi >> (k - 32) if k > 32 else hi
+    return hi >> k, (lo >> k) | (hi << (32 - k))
+
+
+def _rng_kernel(in_hi_ref, in_lo_ref, out_hi_ref, out_lo_ref):
+    """Listing S5: one xorshift64 step per element.
+
+    s ^= s << 21;  s ^= s >> 35;  s ^= s << 4
+    """
+    hi, lo = in_hi_ref[...], in_lo_ref[...]
+    h, l = _shl64(hi, lo, 21)
+    hi, lo = hi ^ h, lo ^ l
+    h, l = _shr64(hi, lo, 35)
+    hi, lo = hi ^ h, lo ^ l
+    h, l = _shl64(hi, lo, 4)
+    hi, lo = hi ^ h, lo ^ l
+    out_hi_ref[...] = hi
+    out_lo_ref[...] = lo
+
+
+def rng_pallas(hi: jax.Array, lo: jax.Array,
+               block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """One xorshift64 step over the whole (rows, LANES) state."""
+    rows = hi.shape[0]
+    assert hi.shape == lo.shape == (rows, LANES)
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    blockspec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((rows, LANES), jnp.uint32)
+    return pl.pallas_call(
+        _rng_kernel,
+        grid=grid,
+        in_specs=(blockspec, blockspec),
+        out_specs=(blockspec, blockspec),
+        out_shape=(out_shape, out_shape),
+        interpret=interpret,
+    )(hi, lo)
+
+
+__all__ = ["init_pallas", "rng_pallas", "LANES", "DEFAULT_BLOCK_ROWS"]

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+``make_production_mesh()`` is a FUNCTION (module import never touches jax
+device state).  Single-pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model) — the "pod"
+axis carries pure data parallelism across the inter-pod DCN boundary.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_devices(mesh) -> int:
+    import math
+    return math.prod(mesh.shape.values())
+
+
+__all__ = ["make_production_mesh", "make_dev_mesh", "mesh_devices"]

@@ -1,0 +1,115 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Terms (seconds, per step), per DESIGN.md §6.  ``cost_analysis()`` FLOPs and
+bytes are per-device post-SPMD (verified empirically); collective bytes are
+parsed per-device from the partitioned HLO.  So:
+
+    compute_s    = flops_per_device / peak_bf16_flops
+    memory_s     = hbm_bytes_per_device / hbm_bandwidth
+    collective_s = coll_bytes_per_device / (ici_links_used × link_bw)
+
+``ici_links_used=1`` is the conservative single-link bound (a 2-D torus can
+stripe over up to 4 links; we report the pessimistic figure and note it).
+
+MODEL_FLOPS: 6·N_active·tokens for training, 2·N_active·tokens for
+prefill/decode (the paper-standard useful-work estimate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..core import hw
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    kind: str                    # train | prefill | decode
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float
+    hlo_flops_total: float
+    peak_bytes_per_dev: int
+    fits_hbm: bool
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — remat/dispatch/mask waste."""
+        return self.model_flops / self.hlo_flops_total \
+            if self.hlo_flops_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at
+        its bound: (model_flops/chips/peak) / bound_s — i.e. MFU at the
+        modeled step time."""
+        ideal = self.model_flops / self.n_devices / \
+            hw.TARGET.peak_bf16_flops
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, bound_s=self.bound_s,
+                 useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, n_active_params: int, tokens: int, kind: str) -> float:
+    if kind == "train":
+        return 6.0 * n_active_params * tokens
+    return 2.0 * n_active_params * tokens
+
+
+def derive(arch: str, shape: str, mesh_name: str, n_devices: int, kind: str,
+           analysis: Dict, n_active_params: int, tokens: int,
+           spec: Optional[hw.ChipSpec] = None, links_used: int = 1
+           ) -> Roofline:
+    s = spec or hw.TARGET
+    flops = float(analysis["flops"])
+    hbm = float(analysis["bytes_accessed"])
+    coll = float(analysis["collective_bytes"])
+    peak_bytes = int(analysis.get("peak_bytes", 0))
+    mf = model_flops(None, n_active_params, tokens, kind)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        kind=kind,
+        compute_s=flops / s.peak_bf16_flops,
+        memory_s=hbm / s.hbm_bandwidth,
+        collective_s=coll / (links_used * s.ici_link_bandwidth),
+        flops_per_dev=flops, hbm_bytes_per_dev=hbm, coll_bytes_per_dev=coll,
+        model_flops=mf, hlo_flops_total=flops * n_devices,
+        peak_bytes_per_dev=peak_bytes,
+        fits_hbm=peak_bytes <= s.hbm_bytes,
+    )
+
+
+def format_row(r: Roofline) -> str:
+    return (f"{r.arch:26s} {r.shape:12s} {r.mesh:9s} "
+            f"c={r.compute_s:9.4f}s m={r.memory_s:9.4f}s "
+            f"x={r.collective_s:9.4f}s dom={r.dominant:10s} "
+            f"useful={r.useful_ratio:6.3f} roofl={r.roofline_fraction:6.3f} "
+            f"mem={r.peak_bytes_per_dev / 2**30:6.2f}GiB "
+            f"fits={'Y' if r.fits_hbm else 'N'}")
+
+
+__all__ = ["Roofline", "derive", "model_flops", "format_row"]

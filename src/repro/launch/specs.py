@@ -1,0 +1,210 @@
+"""ShapeDtypeStruct input/state specs for AOT lowering (no allocation).
+
+This is the cf4ocl pattern of querying kernels for their requirements
+before touching the device: every (architecture × input shape × mesh) cell
+is described purely by metadata, and ``launch.dryrun`` lowers/compiles
+against these stand-ins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import ShardCtx
+from ..models import model as M
+from ..models.attention import KVCache
+from ..models.layers import ParamTpl
+from ..models.rglru import RGLRUCache
+from ..models.ssm import SSMCache
+from ..optim.adamw import AdamWConfig
+from ..train.step import TrainState
+
+
+def _sds(ctx: ShardCtx, shape, dtype, logical) -> jax.ShapeDtypeStruct:
+    sh = ctx.sharding(logical, shape) if ctx.mesh is not None else None
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype), sharding=sh)
+
+
+# ---------------------------------------------------------------- params ----
+
+def param_specs(cfg: M.ModelConfig, ctx: ShardCtx):
+    tpl = M.param_template(cfg)
+    return jax.tree.map(
+        lambda t: _sds(ctx, t.shape, t.dtype, t.logical),
+        tpl, is_leaf=lambda x: isinstance(x, ParamTpl))
+
+
+def param_shardings(cfg: M.ModelConfig, ctx: ShardCtx):
+    tpl = M.param_template(cfg)
+    return jax.tree.map(
+        lambda t: ctx.sharding(t.logical, t.shape),
+        tpl, is_leaf=lambda x: isinstance(x, ParamTpl))
+
+
+def state_specs(cfg: M.ModelConfig, opt_cfg: AdamWConfig, ctx: ShardCtx,
+                moments_ctx: ShardCtx = None) -> TrainState:
+    """``moments_ctx``: optional distinct rule table for optimizer moments
+    (ZeRO-1: params TP-only, moments still fully sharded)."""
+    p = param_specs(cfg, ctx)
+    mdt = jnp.dtype(opt_cfg.moments_dtype)
+    if moments_ctx is not None:
+        pm = param_specs(cfg, moments_ctx)
+        mom = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, mdt,
+                                           sharding=s.sharding), pm)
+    else:
+        mom = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, mdt,
+                                           sharding=s.sharding), p)
+    from ..optim.adamw import OptState
+    return TrainState(
+        params=p,
+        opt=OptState(m=mom, v=jax.tree.map(lambda x: x, mom),
+                     step=_sds(ctx, (), jnp.int32, ())),
+        step=_sds(ctx, (), jnp.int32, ()))
+
+
+# ---------------------------------------------------------------- batches ---
+
+def batch_specs(cfg: M.ModelConfig, ctx: ShardCtx, global_batch: int,
+                seq_len: int, with_labels: bool = True) -> Dict[str, Any]:
+    out = {"tokens": _sds(ctx, (global_batch, seq_len), jnp.int32,
+                          ("batch", None))}
+    if with_labels:
+        out["labels"] = _sds(ctx, (global_batch, seq_len), jnp.int32,
+                             ("batch", None))
+    if cfg.encoder_layers:
+        out["ctx_embed"] = _sds(
+            ctx, (global_batch, cfg.encoder_seq, cfg.d_model), jnp.float32,
+            ("batch", None, None))
+    elif cfg.vis_tokens:
+        out["ctx_embed"] = _sds(
+            ctx, (global_batch, cfg.vis_tokens, cfg.d_model), jnp.float32,
+            ("batch", None, None))
+    return out
+
+
+# ---------------------------------------------------------------- caches ----
+
+def _kv_logical():
+    return KVCache(k=("layers", "batch", "kv_heads", "seq", "state"),
+                   v=("layers", "batch", "kv_heads", "seq", "state"))
+
+
+def cache_specs(cfg: M.ModelConfig, ctx: ShardCtx, batch: int, seq_len: int
+                ) -> Dict[str, Any]:
+    """Mirror of models.model.cache_init as ShapeDtypeStructs."""
+    groups = []
+    for pattern, count in cfg.groups:
+        pos = []
+        for mixer, _ in pattern:
+            if mixer == "ssm":
+                conv_dim = cfg.ssm_expand * cfg.d_model + \
+                    2 * cfg.ssm_groups * cfg.ssm_state
+                c = SSMCache(
+                    conv=_sds(ctx, (count, batch, cfg.conv_kernel - 1,
+                                    conv_dim), jnp.bfloat16,
+                              ("layers", "batch", None, "heads_flat")),
+                    state=_sds(ctx, (count, batch, cfg.ssm_heads,
+                                     cfg.ssm_head_dim, cfg.ssm_state),
+                               jnp.float32,
+                               ("layers", "batch", "heads", None, None)))
+            elif mixer == "rec":
+                c = RGLRUCache(
+                    conv=_sds(ctx, (count, batch, cfg.conv_kernel - 1,
+                                    cfg.lru_width), jnp.bfloat16,
+                              ("layers", "batch", None, "heads_flat")),
+                    state=_sds(ctx, (count, batch, cfg.lru_width),
+                               jnp.float32,
+                               ("layers", "batch", "heads_flat")))
+            elif mixer in ("full", "swa", "local", "chunked", "global_nope",
+                           "self_cross"):
+                S_len = cfg.cache_len(
+                    "full" if mixer == "self_cross" else mixer, seq_len)
+                shape = (count, batch, cfg.n_kv_heads, S_len, cfg.head_dim)
+                la = _kv_logical()
+                c = KVCache(k=_sds(ctx, shape, jnp.bfloat16, la.k),
+                            v=_sds(ctx, shape, jnp.bfloat16, la.v))
+            else:
+                c = None
+            pos.append(c)
+        groups.append(tuple(pos))
+    cache: Dict[str, Any] = {"groups": groups}
+    if cfg.has_cross:
+        S_ctx = cfg.encoder_seq if cfg.encoder_layers else cfg.vis_tokens
+        cache["ctx_enc"] = _sds(ctx, (batch, S_ctx, cfg.d_model),
+                                jnp.dtype(cfg.dtype), ("batch", None, None))
+    return cache
+
+
+def decode_input_specs(cfg: M.ModelConfig, ctx: ShardCtx, batch: int,
+                       seq_len: int) -> Tuple:
+    """(params, cache, token, pos) specs for serve/decode."""
+    return (param_specs(cfg, ctx),
+            cache_specs(cfg, ctx, batch, seq_len),
+            _sds(ctx, (batch, 1), jnp.int32, ("batch", None)),
+            _sds(ctx, (), jnp.int32, ()))
+
+
+# ---------------------------------------------------------------- probes ----
+
+def _unstacked_layer_specs(cfg: M.ModelConfig, pattern, ctx: ShardCtx):
+    """Per-position layer param specs WITHOUT the scan (layers) dim."""
+    out = []
+    for mixer, ffn in pattern:
+        tpl = M._layer_tpl(cfg, mixer, ffn)
+        out.append(jax.tree.map(
+            lambda t: _sds(ctx, t.shape, t.dtype, t.logical),
+            tpl, is_leaf=lambda x: isinstance(x, ParamTpl)))
+    return tuple(out)
+
+
+def block_probe_specs(cfg: M.ModelConfig, ctx: ShardCtx, gi: int,
+                      batch: int, seq_len: int, kind: str):
+    """Specs for one superblock probe (the scan-body cost unit).
+
+    Returns (x, layer_params[, caches][, ctx_embed][, pos]) per kind.
+    """
+    pattern, count = cfg.groups[gi]
+    lp = _unstacked_layer_specs(cfg, pattern, ctx)
+    ctxe = None
+    if cfg.has_cross:
+        S_ctx = cfg.encoder_seq if cfg.encoder_layers else cfg.vis_tokens
+        ctxe = _sds(ctx, (batch, S_ctx, cfg.d_model), jnp.dtype(cfg.dtype),
+                    ("batch", None, None))
+    if kind in ("train", "prefill"):
+        x = _sds(ctx, (batch, seq_len, cfg.d_model), jnp.dtype(cfg.dtype),
+                 ("batch", "seq_ctx", "embed"))
+        return x, lp, None, ctxe
+    # decode: T=1 activations + per-position caches without count dim
+    x = _sds(ctx, (batch, 1, cfg.d_model), jnp.dtype(cfg.dtype),
+             ("batch", None, "embed"))
+    full = cache_specs(cfg, ctx, batch, seq_len)["groups"][gi]
+
+    def _slice(s: jax.ShapeDtypeStruct) -> jax.ShapeDtypeStruct:
+        sh = None
+        if s.sharding is not None and ctx.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            parts = tuple(s.sharding.spec)
+            sh = NamedSharding(ctx.mesh, P(*parts[1:]))
+        return jax.ShapeDtypeStruct(s.shape[1:], s.dtype, sharding=sh)
+
+    caches = jax.tree.map(_slice, full)
+    return x, lp, caches, ctxe
+
+
+def encoder_probe_specs(cfg: M.ModelConfig, ctx: ShardCtx, batch: int):
+    x = _sds(ctx, (batch, cfg.encoder_seq, cfg.d_model),
+             jnp.dtype(cfg.dtype), ("batch", "seq_ctx", "embed"))
+    tpl = M._layer_tpl(cfg, "bidir", "dense")
+    lp = jax.tree.map(lambda t: _sds(ctx, t.shape, t.dtype, t.logical),
+                      tpl, is_leaf=lambda x: isinstance(x, ParamTpl))
+    return x, lp
+
+
+__all__ = ["param_specs", "param_shardings", "state_specs", "batch_specs",
+           "cache_specs", "decode_input_specs"]

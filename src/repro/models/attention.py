@@ -1,0 +1,384 @@
+"""Attention layers: GQA/MQA with RoPE, qk-norm, sliding-window, chunked-local
+and cross-attention; KV-cache (append + rolling-buffer) for decode.
+
+Training attention can run through the Pallas flash kernel
+(cfg.attn_impl="pallas") or the jnp path ("xla", default for dry-runs).
+Decode always uses the jnp path (single-query flash is pointless).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_activation
+from ..kernels.flash_attention.ops import flash_attention
+from . import layers as L
+from .layers import ParamTpl
+from .scan_util import maybe_scan
+
+
+def attn_tpl(d: int, n_heads: int, n_kv: int, head_dim: int, dtype: str,
+             qk_norm: bool = False) -> Dict[str, ParamTpl]:
+    tpl = {
+        "wq": ParamTpl((d, n_heads * head_dim), ("embed", "heads_flat"),
+                       "normal", dtype),
+        "wk": ParamTpl((d, n_kv * head_dim), ("embed", "kv_flat"),
+                       "normal", dtype),
+        "wv": ParamTpl((d, n_kv * head_dim), ("embed", "kv_flat"),
+                       "normal", dtype),
+        "wo": ParamTpl((n_heads * head_dim, d), ("heads_flat", "embed"),
+                       "normal", dtype),
+    }
+    if qk_norm:
+        tpl["q_norm"] = ParamTpl((head_dim,), ("state",), "ones", dtype)
+        tpl["k_norm"] = ParamTpl((head_dim,), ("state",), "ones", dtype)
+    return tpl
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, Hkv, S, Dh)
+    v: jax.Array
+    # rolling=True → writes wrap modulo S (sliding-window decode)
+
+
+def _split_heads(x, n, dh):
+    B, T, _ = x.shape
+    return x.reshape(B, T, n, dh).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, T, Dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, T, H * Dh)
+
+
+def _qk_norm(q, w, eps=1e-6):
+    qf = q.astype(jnp.float32)
+    var = jnp.mean(qf * qf, axis=-1, keepdims=True)
+    return (qf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(q.dtype)
+
+
+def self_attention(p, x, cfg, kind: str, positions,
+                   cache: Optional[KVCache] = None,
+                   rolling: bool = False
+                   ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """kind ∈ {full, swa, local, chunked, global_nope}."""
+    B, T, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ p["wq"], H, Dh)
+    k = _split_heads(x @ p["wk"], Hkv, Dh)
+    v = _split_heads(x @ p["wv"], Hkv, Dh)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.rms_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.rms_eps)
+    use_rope = kind != "global_nope"
+    if use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "heads", None, None))
+    k = shard_activation(k, ("batch", "kv_heads", None, None))
+
+    window = None
+    if kind in ("swa", "local"):
+        window = cfg.window
+    elif kind == "chunked":
+        window = cfg.chunk   # approximation of chunked-local masking
+
+    if cache is None:
+        # training/prefill: self-contained sequence
+        if cfg.attn_impl == "pallas":
+            out = flash_attention(q, k, v, causal=True, window=window)
+        elif T > 1024:
+            # chunked online-softmax (flash semantics in pure XLA) — never
+            # materializes the (T, S) score matrix; required for the 32k
+            # prefill shapes and it is also the memory-friendly train path
+            out = _xla_flash(q, k, v, causal=True, window=window,
+                             q_pos=positions, k_pos=positions,
+                             chunk=cfg.attn_chunk,
+                             unroll=cfg.analysis_unroll,
+                             qblocks=cfg.attn_qblocks)
+        else:
+            out = _xla_attention(q, k, v, causal=True, window=window,
+                                 q_pos=positions, k_pos=positions)
+        # prefill mode: the post-RoPE K and V *are* the decode cache
+        cdt = jnp.dtype(cfg.dtype)
+        new_cache = KVCache(k.astype(cdt), v.astype(cdt)) \
+            if cfg.collect_kv else None
+    else:
+        # decode: write k/v at position, attend over cache
+        S = cache.k.shape[2]
+        pos = positions if positions.ndim == 0 else positions.reshape(-1)[0]
+        widx = jnp.mod(pos, S) if rolling else pos
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, 0, widx, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, 0, widx, 0))
+        new_cache = KVCache(ck, cv)
+        if rolling:
+            k_pos = pos - jnp.mod(pos - jnp.arange(S), S)
+        else:
+            k_pos = jnp.arange(S)
+        q_pos = jnp.full((T,), pos)
+        out = _xla_attention(q, ck, cv, causal=True, window=window,
+                             q_pos=q_pos, k_pos=k_pos)
+    out = _merge_heads(out.astype(x.dtype))
+    return out @ p["wo"], new_cache
+
+
+def _xla_attention(q, k, v, causal: bool, window: Optional[int],
+                   q_pos, k_pos):
+    """jnp attention with explicit positions (supports rolling caches)."""
+    B, H, T, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    group = H // Hkv
+    scale = Dh ** -0.5
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None, :]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
+    qh = q.reshape(B, Hkv, group, T, Dh)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    # k_pos < 0 marks not-yet-written rolling-buffer slots (pos-j wraps
+    # below zero before the buffer fills) — always invalid
+    mask = k_pos[:, None, :] >= 0
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, T, Dh)
+
+
+import functools
+
+
+def _xla_flash(q, k, v, causal: bool, window: Optional[int], q_pos, k_pos,
+               chunk: int = 1024, unroll: bool = False, qblocks: int = 1):
+    """Online-softmax attention, scanning KV chunks — bounded memory with a
+    flash-style custom VJP (only O(T) softmax stats are saved; the backward
+    pass re-streams KV chunks).  The XLA analogue of the Pallas kernel.
+
+    ``qblocks > 1`` (§Perf lever): split queries into blocks and, under a
+    causal/windowed mask with contiguous positions, statically skip KV
+    chunks that are fully masked for the block — ~(Q+1)/2Q of the full
+    causal compute.  Baseline (qblocks=1) computes every chunk masked.
+    ``unroll`` = analysis mode (scan_util).
+    """
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None, :]
+    return _flash_core(causal, window, chunk, unroll, qblocks, q, k, v,
+                       q_pos.astype(jnp.float32),
+                       k_pos.astype(jnp.float32))
+
+
+def _chunk_mask(causal, window, B, T, ck, qp, kpi):
+    msk = jnp.ones((B, T, ck), bool)
+    if causal:
+        msk &= kpi[None, None, :] <= qp[:, :, None]
+    if window is not None:
+        msk &= kpi[None, None, :] > qp[:, :, None] - window
+    return msk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _flash_core(causal, window, chunk, unroll, qblocks, q, k, v, q_pos,
+                k_pos):
+    out, _ = _flash_fwd_impl(causal, window, chunk, unroll, qblocks, q, k, v,
+                             q_pos, k_pos)
+    return out
+
+
+def _normalize_chunk(chunk, S):
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    return chunk
+
+
+def _chunk_range(causal, window, chunk, nc, qb_start, qb_end, off):
+    """Static KV-chunk range needed by queries [qb_start, qb_end) assuming
+    contiguous positions (pos = index + off).  Full range if not causal."""
+    if not causal:
+        return 0, nc
+    last_q = qb_end - 1 + off
+    hi = min(nc, last_q // chunk + 1)
+    lo = 0
+    if window is not None:
+        first_q = qb_start + off
+        lo = max(0, (first_q - window + 1) // chunk)
+    return lo, hi
+
+
+def _flash_fwd_impl(causal, window, chunk, unroll, qblocks, q, k, v,
+                    q_pos, k_pos):
+    B, H, T, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    group = H // Hkv
+    scale = Dh ** -0.5
+    chunk = _normalize_chunk(chunk, S)
+    nc = S // chunk
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, T, Dh)
+    kc = k.reshape(B, Hkv, nc, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, nc, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    kp = k_pos.reshape(nc, chunk)
+    qblocks = qblocks if (T % qblocks == 0 and causal) else 1
+    Tb = T // qblocks
+    off = S - T
+
+    outs, lses = [], []
+    for qi in range(qblocks):
+        qfb = qf[..., qi * Tb:(qi + 1) * Tb, :]
+        qpb = q_pos[:, qi * Tb:(qi + 1) * Tb]
+        lo, hi = _chunk_range(causal, window, chunk, nc,
+                              qi * Tb, (qi + 1) * Tb, off)
+
+        def body(carry, inp, qfb=qfb, qpb=qpb):
+            m, l, acc = carry
+            kci, vci, kpi = inp
+            s = jnp.einsum("bhgtd,bhsd->bhgts", qfb,
+                           kci.astype(jnp.float32)) * scale
+            msk = _chunk_mask(causal, window, B, Tb, chunk, qpb, kpi)
+            s = jnp.where(msk[:, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgts,bhsd->bhgtd", p, vci.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, group, Tb), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, group, Tb), jnp.float32)
+        acc0 = jnp.zeros((B, Hkv, group, Tb, Dh), jnp.float32)
+        (m, l, acc), _ = maybe_scan(
+            body, (m0, l0, acc0),
+            (kc[lo:hi], vc[lo:hi], kp[lo:hi]), unroll=unroll)
+        l = jnp.maximum(l, 1e-30)
+        outs.append((acc / l[..., None]).astype(q.dtype))
+        lses.append(m + jnp.log(l))
+    out = jnp.concatenate(outs, axis=3).reshape(B, H, T, Dh) \
+        if qblocks > 1 else outs[0].reshape(B, H, T, Dh)
+    lse = jnp.concatenate(lses, axis=3) if qblocks > 1 else lses[0]
+    return out, lse
+
+
+def _flash_fwd(causal, window, chunk, unroll, qblocks, q, k, v, q_pos,
+               k_pos):
+    out, lse = _flash_fwd_impl(causal, window, chunk, unroll, qblocks, q, k,
+                               v, q_pos, k_pos)
+    return out, (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, unroll, qblocks, res, dout):
+    q, k, v, q_pos, k_pos, out, lse = res
+    B, H, T, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    group = H // Hkv
+    scale = Dh ** -0.5
+    chunk = _normalize_chunk(chunk, S)
+    nc = S // chunk
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, T, Dh)
+    dof = dout.astype(jnp.float32).reshape(B, Hkv, group, T, Dh)
+    of = out.astype(jnp.float32).reshape(B, Hkv, group, T, Dh)
+    Dvec = jnp.sum(dof * of, axis=-1)          # (B,Hkv,g,T)
+    kc = k.reshape(B, Hkv, nc, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, nc, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    kp = k_pos.reshape(nc, chunk)
+    qblocks = qblocks if (T % qblocks == 0 and causal) else 1
+    Tb = T // qblocks
+    off = S - T
+
+    dqs = []
+    dk = jnp.zeros((nc, B, Hkv, chunk, Dh), jnp.float32)
+    dv = jnp.zeros((nc, B, Hkv, chunk, Dh), jnp.float32)
+    for qi in range(qblocks):
+        sl = slice(qi * Tb, (qi + 1) * Tb)
+        qfb, dofb = qf[..., sl, :], dof[..., sl, :]
+        qpb, lseb, Dvb = q_pos[:, sl], lse[..., sl], Dvec[..., sl]
+        lo, hi = _chunk_range(causal, window, chunk, nc,
+                              qi * Tb, (qi + 1) * Tb, off)
+
+        def body(dq, inp, qfb=qfb, dofb=dofb, qpb=qpb, lseb=lseb, Dvb=Dvb):
+            kci, vci, kpi = inp
+            kcf, vcf = kci.astype(jnp.float32), vci.astype(jnp.float32)
+            s = jnp.einsum("bhgtd,bhsd->bhgts", qfb, kcf) * scale
+            msk = _chunk_mask(causal, window, B, Tb, chunk, qpb, kpi)
+            s = jnp.where(msk[:, None, None], s, -1e30)
+            p = jnp.exp(s - lseb[..., None])
+            dv_c = jnp.einsum("bhgts,bhgtd->bhsd", p, dofb)
+            dp = jnp.einsum("bhgtd,bhsd->bhgts", dofb, vcf)
+            ds = p * (dp - Dvb[..., None])
+            dq = dq + jnp.einsum("bhgts,bhsd->bhgtd", ds, kcf) * scale
+            dk_c = jnp.einsum("bhgts,bhgtd->bhsd", ds, qfb) * scale
+            return dq, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, Hkv, group, Tb, Dh), jnp.float32)
+        dq, (dk_c, dv_c) = maybe_scan(
+            body, dq0, (kc[lo:hi], vc[lo:hi], kp[lo:hi]), unroll=unroll)
+        dqs.append(dq)
+        dk = dk.at[lo:hi].add(dk_c)
+        dv = dv.at[lo:hi].add(dv_c)
+    dq = (jnp.concatenate(dqs, axis=3) if qblocks > 1 else dqs[0]
+          ).reshape(B, H, T, Dh).astype(q.dtype)
+    dk = dk.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, S, Dh).astype(k.dtype)
+    dv = dv.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, S, Dh).astype(v.dtype)
+    zq = jnp.zeros_like(q_pos)
+    zk = jnp.zeros_like(k_pos)
+    return dq, dk, dv, zq, zk
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------- cross ------
+
+def cross_attn_tpl(d: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype: str) -> Dict[str, ParamTpl]:
+    return attn_tpl(d, n_heads, n_kv, head_dim, dtype)
+
+
+def cross_attention(p, x, ctx_kv: Tuple[jax.Array, jax.Array], cfg
+                    ) -> jax.Array:
+    """Cross-attention to precomputed (k, v) of the context (encoder output
+    or vision tokens).  ctx k/v: (B, Hkv, S_ctx, Dh)."""
+    B, T, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = _split_heads(x @ p["wq"], H, Dh)
+    k, v = ctx_kv
+    S = k.shape[2]
+    out = _xla_attention(q, k, v, causal=False, window=None,
+                         q_pos=jnp.zeros((T,), jnp.int32),
+                         k_pos=jnp.zeros((S,), jnp.int32))
+    return _merge_heads(out.astype(x.dtype)) @ p["wo"]
+
+
+def context_kv(p, ctx: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from context embeddings."""
+    k = _split_heads(ctx @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(ctx @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def bidir_attention(p, x, cfg) -> jax.Array:
+    """Bidirectional self-attention (whisper encoder)."""
+    B, T, D = x.shape
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.attn_impl == "pallas":
+        out = flash_attention(q, k, v, causal=False)
+    else:
+        pos = jnp.arange(T)
+        out = _xla_attention(q, k, v, causal=False, window=None,
+                             q_pos=pos, k_pos=pos)
+    return _merge_heads(out.astype(x.dtype)) @ p["wo"]
+
+
+__all__ = ["attn_tpl", "cross_attn_tpl", "self_attention", "cross_attention",
+           "context_kv", "bidir_attention", "KVCache"]

@@ -1,0 +1,440 @@
+"""Unified model definition covering the 10 assigned architectures.
+
+A model is a stack of *pattern groups*: each group scans a superblock of
+layers (``jax.lax.scan`` over stacked params — keeps HLO small and AOT
+compile times tractable at 48 layers × 512 devices).  A superblock is a
+tuple of (mixer_kind, ffn_kind) pairs:
+
+    mixer kinds: full | swa | local | chunked | global_nope | ssm | rec
+                 | self_cross (decoder self+cross) | cross (cross-only)
+                 | bidir (encoder)
+    ffn kinds:   dense | moe | none
+
+Examples: dense LMs = (("full","dense"),)×L; mixtral = (("swa","moe"),)×32;
+llama4 = (chunked/dense, chunked/moe, chunked/dense, global_nope/moe)×12;
+recurrentgemma = (rec, rec, local)×12 + (rec, rec)×1; whisper decoder =
+(("self_cross","dense"),)×24 with a separate bidir encoder stack.
+
+Decode carries a cache pytree mirroring the group structure (KV caches,
+rolling buffers, SSM/RG-LRU states, precomputed cross K/V).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_activation
+from . import attention as A
+from . import layers as L
+from . import moe as M
+from . import rglru as R
+from . import ssm as S
+from .layers import ParamTpl
+
+Pattern = Tuple[Tuple[str, str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense|moe|ssm|hybrid|audio|vlm
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: Pattern = (("full", "dense"),)
+    act: str = "silu"
+    glu: bool = True
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    rms_eps: float = 1e-6
+    norm_plus_one: bool = False
+    embed_scale: bool = False
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0
+    window: Optional[int] = None
+    chunk: Optional[int] = None
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+    aux_loss_weight: float = 0.01
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    # RG-LRU
+    lru_width: int = 0
+    # encoder (whisper) / vision (llama3.2) context
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    vis_tokens: int = 0
+    # numerics / impl
+    dtype: str = "bfloat16"
+    attn_impl: str = "xla"          # xla | pallas
+    attn_chunk: int = 256           # KV-chunk of the streaming softmax
+    attn_qblocks: int = 1           # >1: static causal chunk skipping
+    norm_impl: str = "xla"
+    remat: str = "none"             # none | dots | full
+    scan_layers: bool = True
+    ce_chunk: int = 0               # 0 = plain CE; >0 = chunked CE
+    collect_kv: bool = False        # prefill mode: emit per-layer caches
+    analysis_unroll: bool = False   # unroll inner scans (exact HLO flops)
+    # long-context decode support
+    sub_quadratic: bool = False     # True: decode cache is O(window/state)
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def groups(self) -> List[Tuple[Pattern, int]]:
+        p = len(self.pattern)
+        full, rem = divmod(self.num_layers, p)
+        out: List[Tuple[Pattern, int]] = []
+        if full:
+            out.append((self.pattern, full))
+        if rem:
+            out.append((self.pattern[:rem], 1))
+        return out
+
+    @property
+    def has_cross(self) -> bool:
+        return any(m in ("self_cross", "cross")
+                   for m, _ in self.pattern)
+
+    def cache_len(self, mixer: str, seq_len: int) -> int:
+        if mixer in ("swa", "local"):
+            return min(self.window or seq_len, seq_len)
+        if mixer == "chunked":
+            return min(self.chunk or seq_len, seq_len)
+        return seq_len
+
+
+# =============================================================== templates ==
+
+def _mixer_tpl(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    dt = cfg.dtype
+    if kind == "ssm":
+        return S.ssm_tpl(cfg, dt)
+    if kind == "rec":
+        return R.rglru_tpl(cfg, dt)
+    base = A.attn_tpl(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.head_dim, dt, cfg.qk_norm)
+    if kind == "self_cross":
+        return {"self": base,
+                "cross": A.cross_attn_tpl(cfg.d_model, cfg.n_heads,
+                                          cfg.n_kv_heads, cfg.head_dim, dt),
+                "ln_cross": L.rmsnorm_tpl(cfg.d_model, dt)}
+    return base
+
+
+def _ffn_tpl(cfg: ModelConfig, kind: str) -> Optional[Dict[str, Any]]:
+    if kind == "none":
+        return None
+    if kind == "moe":
+        return M.moe_tpl(cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.dtype,
+                         cfg.glu, cfg.shared_expert)
+    return L.mlp_tpl(cfg.d_model, cfg.d_ff, cfg.glu, cfg.dtype)
+
+
+def _layer_tpl(cfg: ModelConfig, mixer: str, ffn: str) -> Dict[str, Any]:
+    tpl: Dict[str, Any] = {
+        "ln1": L.rmsnorm_tpl(cfg.d_model, cfg.dtype),
+        "mixer": _mixer_tpl(cfg, mixer),
+    }
+    f = _ffn_tpl(cfg, ffn)
+    if f is not None:
+        tpl["ln2"] = L.rmsnorm_tpl(cfg.d_model, cfg.dtype)
+        tpl["ffn"] = f
+    return tpl
+
+
+def param_template(cfg: ModelConfig) -> Dict[str, Any]:
+    tpl: Dict[str, Any] = {
+        "embed": L.embed_tpl(cfg.vocab, cfg.d_model, cfg.dtype),
+        "ln_f": L.rmsnorm_tpl(cfg.d_model, cfg.dtype),
+        "groups": [],
+    }
+    if not cfg.tie_embeddings:
+        tpl["unembed"] = L.embed_tpl(cfg.vocab, cfg.d_model, cfg.dtype)
+    for pattern, count in cfg.groups:
+        layers = tuple(_layer_tpl(cfg, m, f) for m, f in pattern)
+        tpl["groups"].append(
+            {"layers": tuple(L.stack_tpl(l, count) for l in layers)})
+    if cfg.encoder_layers:
+        enc_layer = _layer_tpl(cfg, "bidir", "dense")
+        tpl["encoder"] = {
+            "layers": L.stack_tpl(enc_layer, cfg.encoder_layers),
+            "ln_f": L.rmsnorm_tpl(cfg.d_model, cfg.dtype),
+        }
+    return tpl
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    return L.init_tree(param_template(cfg), key)
+
+
+def param_count(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active-per-token) parameter counts."""
+    tpl = param_template(cfg)
+    leaves = jax.tree.leaves(
+        tpl, is_leaf=lambda x: isinstance(x, ParamTpl))
+    total = sum(math.prod(l.shape) for l in leaves)
+    active = total
+    if cfg.n_experts and cfg.top_k:
+        # experts contribute top_k/E of their weights per token
+        expert_params = sum(
+            math.prod(l.shape) for l in leaves
+            if len(l.shape) >= 3 and cfg.n_experts in l.shape[:2])
+        active = total - expert_params + \
+            expert_params * cfg.top_k // cfg.n_experts
+    return total, active
+
+
+# ================================================================= forward ==
+
+def _norm(cfg, w, x):
+    return L.rmsnorm(x, w, cfg.rms_eps, cfg.norm_plus_one, cfg.norm_impl)
+
+
+def _apply_layer(cfg: ModelConfig, mixer: str, ffn: str, p, x, positions,
+                 ctx, cache, rolling: bool):
+    """One transformer-ish layer. Returns (x, new_cache, aux).
+
+    ``ctx`` is the raw encoder/vision embedding sequence (B, S_ctx, D);
+    cross layers project their own K/V from it.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, p["ln1"], x)
+    new_cache = cache
+    if mixer == "ssm":
+        out, new_cache = S.ssm_block(p["mixer"], h, cfg, cache)
+    elif mixer == "rec":
+        out, new_cache = R.rglru_block(p["mixer"], h, cfg, cache)
+    elif mixer == "bidir":
+        out = A.bidir_attention(p["mixer"], h, cfg)
+    elif mixer == "cross":
+        kv = A.context_kv(p["mixer"], ctx, cfg)
+        out = A.cross_attention(p["mixer"], h, kv, cfg)
+    elif mixer == "self_cross":
+        out, new_cache = A.self_attention(
+            p["mixer"]["self"], h, cfg, "full", positions, cache, False)
+        x = x + out
+        h2 = _norm(cfg, p["mixer"]["ln_cross"], x)
+        kv = A.context_kv(p["mixer"]["cross"], ctx, cfg)
+        out = A.cross_attention(p["mixer"]["cross"], h2, kv, cfg)
+    else:
+        out, new_cache = A.self_attention(
+            p["mixer"], h, cfg, mixer, positions, cache,
+            rolling and mixer in ("swa", "local", "chunked"))
+    x = x + out
+    if ffn != "none":
+        h = _norm(cfg, p["ln2"], x)
+        if ffn == "moe":
+            out, aux = M.moe_ffn(p["ffn"], h, cfg)
+        else:
+            out = L.mlp(p["ffn"], h, cfg.act, cfg.glu)
+        x = x + out
+    x = shard_activation(x, ("batch", "seq_ctx", "embed"))
+    return x, new_cache, aux
+
+
+def apply_superblock(cfg: ModelConfig, pattern: Pattern, x, layer_params,
+                     layer_caches, positions, ctx, rolling: bool):
+    """One superblock (one scan iteration): the unit the dry-run probes."""
+    aux_tot = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, (mixer, ffn) in enumerate(pattern):
+        c = layer_caches[i] if layer_caches is not None else None
+        x, nc, aux = _apply_layer(cfg, mixer, ffn, layer_params[i], x,
+                                  positions, ctx, c, rolling)
+        new_caches.append(nc)
+        aux_tot = aux_tot + aux
+    return x, tuple(new_caches), aux_tot
+
+
+def remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    return fn
+
+
+def _group_forward(cfg: ModelConfig, pattern: Pattern, count: int, gp,
+                   x, positions, ctx, caches, rolling: bool):
+    """Scan a superblock over ``count`` repeats.
+
+    caches: None (training) or tuple (per pattern position) of stacked cache
+    pytrees with leading dim = count.
+    """
+    superblock = remat_wrap(
+        cfg, lambda x, lp, lc: apply_superblock(
+            cfg, pattern, x, lp, lc, positions, ctx, rolling))
+
+    emit = caches is not None or cfg.collect_kv
+    if not cfg.scan_layers or count == 1:
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_caches_all = []
+        for j in range(count):
+            lp = jax.tree.map(lambda a: a[j], gp["layers"])
+            lc = None if caches is None else \
+                jax.tree.map(lambda a: a[j], caches)
+            x, ncs, aux = superblock(x, lp, lc)
+            new_caches_all.append(ncs)
+            aux_tot = aux_tot + aux
+        new_stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_caches_all) if emit else None
+        return x, new_stacked, aux_tot
+
+    def body(carry, xs):
+        x, aux_tot = carry
+        lp, lc = xs
+        x, ncs, aux = superblock(x, lp, lc)
+        return (x, aux_tot + aux), ncs
+
+    (x, aux_tot), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (gp["layers"], caches))
+    return x, new_caches, aux_tot
+
+
+def forward(cfg: ModelConfig, params, tokens, *,
+            ctx_embed: Optional[jax.Array] = None,
+            cache: Optional[Dict] = None,
+            pos0: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (hidden (B,T,D), new_cache, aux_loss).
+
+    Training/prefill: cache=None, positions = arange(T).
+    Decode: cache given, tokens (B,1), pos0 scalar absolute position.
+    """
+    B, T = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg.embed_scale)
+    positions = jnp.arange(T) if pos0 is None else \
+        jnp.broadcast_to(jnp.asarray(pos0), (T,))
+
+    ctx = None
+    if cfg.has_cross:
+        if cache is not None and "ctx_enc" in cache:
+            ctx = cache["ctx_enc"]
+        else:
+            assert ctx_embed is not None, "cross-attn model needs ctx_embed"
+            ctx = ctx_embed
+            if cfg.encoder_layers:
+                ctx = encode(cfg, params, ctx_embed)
+
+    new_cache: Optional[Dict] = None
+    if cache is not None:
+        new_cache = {k: v for k, v in cache.items() if k != "groups"}
+        new_cache["groups"] = list(cache["groups"])
+    elif cfg.collect_kv:
+        new_cache = {"groups": [None] * len(cfg.groups)}
+        if ctx is not None:
+            new_cache["ctx_enc"] = ctx
+    aux_tot = jnp.zeros((), jnp.float32)
+    for gi, (pattern, count) in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+        gc = None if cache is None else cache["groups"][gi]
+        x, ngc, aux = _group_forward(cfg, pattern, count, gp, x, positions,
+                                     ctx, gc, rolling=cache is not None)
+        aux_tot = aux_tot + aux
+        if new_cache is not None:
+            new_cache["groups"][gi] = ngc
+    x = _norm(cfg, params["ln_f"], x)
+    return x, new_cache, aux_tot
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend: conv feature extraction is assumed done upstream)."""
+    enc = params["encoder"]
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    T = x.shape[1]
+    positions = jnp.arange(T)
+
+    block = remat_wrap(
+        cfg, lambda x, lp: _apply_layer(cfg, "bidir", "dense", lp, x,
+                                        positions, None, None, False)[0])
+
+    def body(x, lp):
+        return block(x, lp), None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return _norm(cfg, enc["ln_f"], x)
+
+
+def logits_fn(cfg: ModelConfig, params, hidden: jax.Array) -> jax.Array:
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(emb, hidden, cfg.logits_softcap)
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, labels,
+            ctx_embed: Optional[jax.Array] = None) -> jax.Array:
+    hidden, _, aux = forward(cfg, params, tokens, ctx_embed=ctx_embed)
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if cfg.ce_chunk:
+        ce = L.chunked_cross_entropy(hidden, emb, labels, cfg.ce_chunk,
+                                     cfg.logits_softcap)
+    else:
+        logits = L.unembed(emb, hidden, cfg.logits_softcap)
+        ce = L.cross_entropy(logits, labels)
+    return ce + cfg.aux_loss_weight * aux
+
+
+# ================================================================== cache ===
+
+def cache_init(cfg: ModelConfig, batch: int, seq_len: int,
+               ctx_embed: Optional[jax.Array] = None) -> Dict:
+    """Build an empty decode cache for a context of ``seq_len``."""
+    dt = jnp.dtype(cfg.dtype)
+    groups = []
+    for pattern, count in cfg.groups:
+        pos_caches = []
+        for mixer, _ in pattern:
+            if mixer == "ssm":
+                c = S.ssm_cache_init(cfg, batch)
+            elif mixer == "rec":
+                c = R.rglru_cache_init(cfg, batch)
+            elif mixer in ("full", "swa", "local", "chunked", "global_nope",
+                           "self_cross"):
+                S_len = cfg.cache_len(mixer if mixer != "self_cross"
+                                      else "full", seq_len)
+                c = A.KVCache(
+                    k=jnp.zeros((batch, cfg.n_kv_heads, S_len, cfg.head_dim),
+                                dt),
+                    v=jnp.zeros((batch, cfg.n_kv_heads, S_len, cfg.head_dim),
+                                dt))
+            else:  # cross-only layers keep no per-step cache
+                c = None
+            pos_caches.append(jax.tree.map(
+                lambda a: jnp.zeros((count,) + a.shape, a.dtype), c))
+        groups.append(tuple(pos_caches))
+    cache: Dict[str, Any] = {"groups": groups}
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: Dict, token: jax.Array,
+                pos: jax.Array, ctx_embed: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict]:
+    """One-token decode: token (B,1) int32, pos scalar int32."""
+    hidden, new_cache, _ = forward(cfg, params, token, ctx_embed=ctx_embed,
+                                   cache=cache, pos0=pos)
+    return logits_fn(cfg, params, hidden), new_cache
+
+
+__all__ = ["ModelConfig", "param_template", "init_params", "param_count",
+           "forward", "encode", "loss_fn", "logits_fn", "cache_init",
+           "decode_step"]

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with sort-based (flop-free) dispatch.
+
+Dispatch strategy (TPU adaptation of MegaBlocks-style grouping): instead of
+GShard's dense one-hot dispatch einsum — whose FLOPs rival the expert
+matmuls themselves at 128 experts — tokens are ranked within their expert
+via an argsort over the (group, tokens) axis, scattered into per-expert
+capacity buffers, processed by a batched expert GEMM, and gathered back.
+All index math is O(S log S) per group; the only heavy compute left is the
+expert GEMM (= model FLOPs × capacity factor).
+
+Grouping: tokens are dispatched within their batch row (group = sequence),
+so the rank cumsum never crosses the data-parallel sharding boundary — no
+cross-shard scan collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_activation
+from .layers import ParamTpl, _act
+
+
+def moe_tpl(d: int, f: int, n_experts: int, dtype: str, glu: bool = True,
+            shared_expert: bool = False) -> Dict[str, ParamTpl]:
+    tpl = {
+        "router": ParamTpl((d, n_experts), ("embed", None), "small_normal",
+                           dtype),
+        "w_in": ParamTpl((n_experts, d, f),
+                         ("experts", "moe_embed", "mlp"), "normal", dtype),
+        "w_out": ParamTpl((n_experts, f, d),
+                          ("experts", "mlp", "moe_embed"), "normal", dtype),
+    }
+    if glu:
+        tpl["w_gate"] = ParamTpl((n_experts, d, f),
+                                 ("experts", "moe_embed", "mlp"), "normal",
+                                 dtype)
+    if shared_expert:
+        tpl["shared_in"] = ParamTpl((d, f), ("embed", "mlp"), "normal", dtype)
+        tpl["shared_gate"] = ParamTpl((d, f), ("embed", "mlp"), "normal",
+                                      dtype)
+        tpl["shared_out"] = ParamTpl((f, d), ("mlp", "embed"), "normal",
+                                     dtype)
+    return tpl
+
+
+def _rank_within_expert(eidx: jax.Array) -> jax.Array:
+    """eidx: (G, S) expert ids → (G, S) rank of each token within its expert
+    (order of appearance), via argsort — no (S, E) one-hot materialized."""
+    G, S = eidx.shape
+    order = jnp.argsort(eidx, axis=1, stable=True)            # (G, S)
+    sorted_e = jnp.take_along_axis(eidx, order, axis=1)
+    arange = jnp.broadcast_to(jnp.arange(S), (G, S))
+    is_start = jnp.concatenate(
+        [jnp.ones((G, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1)
+    seg_start = jax.lax.cummax(jnp.where(is_start, arange, 0), axis=1)
+    rank_sorted = arange - seg_start
+    inv = jnp.argsort(order, axis=1)
+    return jnp.take_along_axis(rank_sorted, inv, axis=1)
+
+
+def moe_ffn(p, x: jax.Array, cfg, *, aux_loss: bool = True
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) → (out, aux) with aux the load-balancing loss term."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    F = cfg.d_ff
+    xf = x.reshape(B, T, D)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)           # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, K)                 # (B, T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e · p_e
+    if aux_loss:
+        me = probs.mean(axis=(0, 1))                          # (E,)
+        ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+            1.0 / (B * T * K))
+        aux = E * jnp.sum(me * ce)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+
+    # ---- dispatch: group = batch row -------------------------------------
+    SK = T * K
+    cap = int(max(1, round(T * K * cfg.capacity_factor / E)))
+    eidx_flat = eidx.reshape(B, SK)                           # (B, SK)
+    gates_flat = gate_vals.reshape(B, SK)
+    rank = _rank_within_expert(eidx_flat)                     # (B, SK)
+    keep = rank < cap
+    slot = jnp.where(keep, eidx_flat * cap + rank, E * cap)   # drop → trash
+
+    xtok = jnp.repeat(xf, K, axis=1) if K > 1 else xf         # (B, SK, D)
+    buf = jnp.zeros((B, E * cap + 1, D), x.dtype)
+    buf = buf.at[jnp.arange(B)[:, None], slot].set(xtok)
+    buf = buf[:, : E * cap].reshape(B, E, cap, D)
+    buf = shard_activation(buf, ("batch", "experts", None, None))
+
+    # ---- expert GEMMs ------------------------------------------------------
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+        h = _act(g, cfg.act) * h
+    else:
+        h = _act(h, cfg.act)
+    h = shard_activation(h, ("batch", "experts", None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_out"])
+    out_buf = out_buf.reshape(B, E * cap, D)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((B, 1, D), out_buf.dtype)], axis=1)
+
+    # ---- combine -------------------------------------------------------------
+    ytok = out_buf[jnp.arange(B)[:, None], slot]              # (B, SK, D)
+    ytok = ytok * gates_flat[..., None].astype(ytok.dtype)
+    y = ytok.reshape(B, T, K, D).sum(axis=2)
+
+    if "shared_in" in p:
+        sh = _act(xf @ p["shared_gate"], cfg.act) * (xf @ p["shared_in"])
+        y = y + sh @ p["shared_out"]
+    return y.astype(x.dtype), aux
+
+
+__all__ = ["moe_tpl", "moe_ffn"]

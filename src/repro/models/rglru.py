@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)  is a linear
+(associative) recurrence, so training uses ``jax.lax.associative_scan``
+(log-depth on TPU) instead of a sequential loop; decode is the O(1) update.
+Block structure: dual linear branches (gate: GeLU; recurrent: causal conv →
+RG-LRU), merged multiplicatively and projected back (the Griffin
+"recurrent block").
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamTpl
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_tpl(cfg, dtype: str) -> Dict[str, ParamTpl]:
+    d = cfg.d_model
+    w = cfg.lru_width
+    k = cfg.conv_kernel
+    return {
+        "w_gate_in": ParamTpl((d, w), ("embed", "heads_flat"), "normal",
+                              dtype),
+        "w_rec_in": ParamTpl((d, w), ("embed", "heads_flat"), "normal",
+                             dtype),
+        "conv_w": ParamTpl((k, w), ("conv", "heads_flat"), "normal", dtype),
+        "conv_b": ParamTpl((w,), ("heads_flat",), "zeros", dtype),
+        "w_r": ParamTpl((w, w), ("heads_flat", None), "small_normal", dtype),
+        "w_i": ParamTpl((w, w), ("heads_flat", None), "small_normal", dtype),
+        "lam": ParamTpl((w,), ("state",), "ones", "float32"),  # Λ
+        "w_out": ParamTpl((w, d), ("heads_flat", "embed"), "normal", dtype),
+    }
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array      # (B, k-1, W)
+    state: jax.Array     # (B, W) float32
+
+
+def _causal_conv(x, w, b, cache: Optional[jax.Array] = None):
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_cache = xp[:, -(k - 1):] if k > 1 else None
+    return out + b[None, None], new_cache
+
+
+def _rglru_coeffs(p, xr):
+    """Per-step (a, b) of the affine recurrence h = a·h + b."""
+    r = jax.nn.sigmoid((xr @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xr @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * xr.astype(jnp.float32)
+    return a, b
+
+
+def rglru_block(p, x, cfg, cache: Optional[RGLRUCache] = None
+                ) -> Tuple[jax.Array, Optional[RGLRUCache]]:
+    """x: (B, T, D) → (B, T, D)."""
+    gate = jax.nn.gelu((x @ p["w_gate_in"]).astype(jnp.float32),
+                       approximate=True)
+    xr = x @ p["w_rec_in"]
+    conv_cache = cache.conv if cache is not None else None
+    xr, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_cache)
+    a, b = _rglru_coeffs(p, xr)                       # (B, T, W) f32
+
+    emit_cache = cache is not None or cfg.collect_kv
+    if cache is None:
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_state = h[:, -1] if cfg.collect_kv else None
+    else:
+        h = a[:, 0] * cache.state + b[:, 0]           # (B, W)
+        new_state = h
+        h = h[:, None]
+    y = (h * gate).astype(x.dtype)
+    out = y @ p["w_out"]
+    new_cache = RGLRUCache(new_conv, new_state) if emit_cache else None
+    return out, new_cache
+
+
+def rglru_cache_init(cfg, batch: int) -> RGLRUCache:
+    return RGLRUCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.lru_width),
+                       jnp.bfloat16),
+        state=jnp.zeros((batch, cfg.lru_width), jnp.float32))
+
+
+__all__ = ["rglru_tpl", "rglru_block", "RGLRUCache", "rglru_cache_init"]

@@ -1,0 +1,32 @@
+"""scan-or-unroll helper.
+
+XLA's ``cost_analysis()`` counts a ``while`` body once regardless of trip
+count, so AOT analysis of scanned code under-reports FLOPs/collectives.
+``maybe_scan(unroll=True)`` runs the identical body as an unrolled Python
+loop — bigger HLO, exact costs.  Execution paths keep ``unroll=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maybe_scan(body, carry, xs, unroll: bool = False, length=None):
+    if not unroll:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if not ys or all(l is None for l in jax.tree.leaves(ys[0])) and \
+            ys[0] is None:
+        stacked = None
+    else:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+__all__ = ["maybe_scan"]

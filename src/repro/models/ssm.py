@@ -1,0 +1,218 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked for TPU.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence
+is split into chunks; intra-chunk outputs use the quadratic (attention-like,
+MXU-friendly) form, inter-chunk information flows through a scan over the
+per-chunk final states.  All recurrence math is float32.
+
+Decode maintains (conv_state, ssd_state) and performs the O(1) recurrent
+update per token.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard_activation
+from .layers import ParamTpl
+from .scan_util import maybe_scan
+
+
+def ssm_tpl(cfg, dtype: str) -> Dict[str, ParamTpl]:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    G = cfg.ssm_groups
+    k = cfg.conv_kernel
+    conv_dim = din + 2 * G * N
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": ParamTpl((d, 2 * din + 2 * G * N + H),
+                            ("embed", "heads_flat"), "normal", dtype),
+        "conv_w": ParamTpl((k, conv_dim), ("conv", "heads_flat"), "normal",
+                           dtype),
+        "conv_b": ParamTpl((conv_dim,), ("heads_flat",), "zeros", dtype),
+        "A_log": ParamTpl((H,), ("state",), "zeros", "float32"),
+        "D": ParamTpl((H,), ("state",), "ones", "float32"),
+        "dt_bias": ParamTpl((H,), ("state",), "zeros", "float32"),
+        "norm_w": ParamTpl((din,), ("heads_flat",), "ones", dtype),
+        "out_proj": ParamTpl((din, d), ("heads_flat", "embed"), "normal",
+                             dtype),
+    }
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array     # (B, k-1, conv_dim)
+    state: jax.Array    # (B, H, P, N) float32
+
+
+def _split_proj(cfg, proj):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    idx = [din, 2 * din, 2 * din + G * N, 2 * din + 2 * G * N]
+    z = proj[..., : idx[0]]
+    xs = proj[..., idx[0]: idx[1]]
+    Bm = proj[..., idx[1]: idx[2]]
+    Cm = proj[..., idx[2]: idx[3]]
+    dt = proj[..., idx[3]:]
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b, cache: Optional[jax.Array] = None):
+    """x: (B, T, C); w: (k, C) depthwise causal conv."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_cache = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out + b[None, None]), new_cache
+
+
+def _segsum(da):
+    """da: (..., cl) → (..., cl, cl) lower-triangular cumulative sums:
+    out[..., i, j] = sum(da[..., j+1 : i+1]) for i ≥ j."""
+    cl = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((cl, cl), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xs, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                unroll: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD forward.
+
+    xs: (B, T, H, P); dt: (B, T, H) softplus'd; A: (H,) negative;
+    Bm, Cm: (B, T, G, N).  Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, T, H, P = xs.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = T // chunk
+    c = chunk
+
+    xs = xs.reshape(Bsz, nc, c, H, P).astype(jnp.float32)
+    dt = dt.reshape(Bsz, nc, c, H).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, c, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, nc, c, G, N).astype(jnp.float32)
+    Bh = jnp.repeat(Bm, rep, axis=3)                     # (B, nc, c, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=3)
+
+    da = dt * A[None, None, None, :]                     # (B, nc, c, H)
+    da_t = da.transpose(0, 1, 3, 2)                      # (B, nc, H, c)
+    Lmat = jnp.exp(_segsum(da_t))                        # (B, nc, H, c, c)
+
+    xdt = xs * dt[..., None]                             # x·Δ
+
+    # intra-chunk (quadratic / attention-like form); d = state dim
+    scores = jnp.einsum("bnchd,bnshd->bnhcs", Ch, Bh)
+    y_intra = jnp.einsum("bnhcs,bnhcs,bnshp->bnchp",
+                         scores, Lmat, xdt)
+
+    # per-chunk final states
+    decay_to_end = jnp.exp(jnp.cumsum(da_t[..., ::-1], axis=-1)[..., ::-1]
+                           - da_t)                        # (B, nc, H, c)
+    states = jnp.einsum("bnchd,bnhc,bnchp->bnhpd", Bh, decay_to_end, xdt)
+
+    # inter-chunk scan over chunk states
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))           # (B, nc, H)
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None \
+        else init_state
+
+    def scan_body(h, inp):
+        s, dec = inp                                      # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + s
+        return h_new, h
+
+    (h_final, h_prevs) = maybe_scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=unroll)
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # (B, nc, H, P, N)
+
+    # inter-chunk contribution: decay from chunk start
+    decay_from_start = jnp.exp(jnp.cumsum(da_t, axis=-1))  # (B, nc, H, c)
+    y_inter = jnp.einsum("bnchd,bnhc,bnhpd->bnchp",
+                         Ch, decay_from_start, h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, h_final
+
+
+def ssm_block(p, x, cfg, cache: Optional[SSMCache] = None
+              ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Full Mamba-2 mixer. x: (B, T, D)."""
+    Bsz, T, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = cfg.ssm_expand * D
+    proj = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_cache = cache.conv if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_cache)
+    xs = conv_out[..., :din].reshape(Bsz, T, H, P)
+    xs = shard_activation(xs, ("batch", None, "heads", None))
+    Bm = conv_out[..., din: din + cfg.ssm_groups * N].reshape(
+        Bsz, T, cfg.ssm_groups, N)
+    Cm = conv_out[..., din + cfg.ssm_groups * N:].reshape(
+        Bsz, T, cfg.ssm_groups, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    emit_cache = cache is not None or cfg.collect_kv
+    if cache is None:
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm,
+                                     min(cfg.ssm_chunk, T),
+                                     unroll=cfg.analysis_unroll)
+        new_state = final_state if cfg.collect_kv else None
+    else:
+        # O(1) decode update: h = exp(dt·A)·h + dt·B⊗x ; y = C·h
+        h = cache.state                                    # (B,H,P,N)
+        xs1 = xs[:, 0].astype(jnp.float32)                 # (B,H,P)
+        dt1 = dt[:, 0]                                     # (B,H)
+        rep = H // cfg.ssm_groups
+        B1 = jnp.repeat(Bm[:, 0], rep, axis=1).astype(jnp.float32)  # (B,H,N)
+        C1 = jnp.repeat(Cm[:, 0], rep, axis=1).astype(jnp.float32)
+        decay = jnp.exp(dt1 * A[None, :])                  # (B,H)
+        h = h * decay[:, :, None, None] + \
+            jnp.einsum("bhp,bhn,bh->bhpn", xs1, B1, dt1)
+        y = jnp.einsum("bhpn,bhn->bhp", h, C1)[:, None]    # (B,1,H,P)
+        new_state = h
+
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, T, din).astype(x.dtype)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + 1e-6) *
+         p["norm_w"].astype(jnp.float32)).astype(x.dtype)
+    out = g @ p["out_proj"]
+    new_cache = SSMCache(new_conv, new_state) if emit_cache else None
+    return out, new_cache
+
+
+def ssm_cache_init(cfg, batch: int, dtype=jnp.float32) -> SSMCache:
+    din = cfg.ssm_expand * cfg.d_model
+    conv_dim = din + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim),
+                       jnp.dtype(cfg.dtype)),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32))
+
+
+__all__ = ["ssm_tpl", "ssm_block", "ssd_chunked", "SSMCache",
+           "ssm_cache_init"]

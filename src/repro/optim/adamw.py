@@ -1,0 +1,116 @@
+"""AdamW + schedules, self-contained (no optax dependency).
+
+Params may live in bf16: the update math runs in f32 on the fly (no
+separate master copy — the f32 moments retain the update history, the
+standard memory/quality trade at this scale).  Moment dtype is
+configurable: ``moments_dtype="bfloat16"`` halves optimizer memory, which
+is what lets llama4-maverick (398 B params) fit a single 256-chip v5e pod
+(EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"        # cosine | constant | linear
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> OptState:
+    dt = jnp.dtype(cfg.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        decay = jnp.maximum(
+            0.0, 1.0 - s / max(1, cfg.total_steps))
+    else:
+        frac = jnp.clip(s / max(1, cfg.total_steps), 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: OptState,
+                  decay_mask: Optional[Any] = None
+                  ) -> Tuple[Any, OptState, jax.Array]:
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def upd(p, g, m, v, wd):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + wd * cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mf.astype(mdt), vf.astype(mdt)
+
+    if decay_mask is None:
+        # decay everything except 1-D params (norms, biases)
+        decay_mask = jax.tree.map(lambda p: float(p.ndim > 1), params)
+    pl, treedef = jax.tree.flatten(params)
+    gl = jax.tree.leaves(grads)
+    ml = jax.tree.leaves(state.m)
+    vl = jax.tree.leaves(state.v)
+    dl = jax.tree.leaves(decay_mask)
+    res = [upd(p, g, m, v, w) for p, g, m, v, w in zip(pl, gl, ml, vl, dl)]
+    newp = jax.tree.unflatten(treedef, [r[0] for r in res])
+    newm = jax.tree.unflatten(treedef, [r[1] for r in res])
+    newv = jax.tree.unflatten(treedef, [r[2] for r in res])
+    return newp, OptState(newm, newv, step), gnorm
+
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "apply_updates",
+           "schedule", "global_norm", "clip_by_global_norm"]

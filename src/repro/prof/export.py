@@ -1,0 +1,83 @@
+"""Export + plotting support — ``ccl_prof_export_info`` / ``ccl_plot_events``.
+
+cf4ocl exports a 4-column table (queue, start, end, name) consumable by the
+``ccl_plot_events`` script, which draws a queue-utilization chart.  Here we
+export the same table (tab-separated) and render the chart directly as
+ASCII (one row per queue, one glyph per time bucket), since the container
+has no display.  The CSV is also written so external tools can plot it.
+"""
+
+from __future__ import annotations
+
+import io
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .profiler import Prof, ProfInfo
+
+
+def export_table(prof: Prof, path: Optional[str] = None, sep: str = "\t"
+                 ) -> str:
+    """4-column (queue, start_ns, end_ns, name) table, cf4ocl-compatible."""
+    rows = [f"{i.queue}{sep}{i.t_start}{sep}{i.t_end}{sep}{i.name}"
+            for i in prof.iter_infos()]
+    text = "\n".join(rows) + ("\n" if rows else "")
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def parse_table(text: str, sep: str = "\t") -> List[Tuple[str, int, int, str]]:
+    out = []
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        q, s, e, n = line.split(sep)
+        out.append((q, int(s), int(e), n))
+    return out
+
+
+_GLYPHS = "#@%*+=~-:."
+
+
+def render_queue_chart(rows: Sequence[Tuple[str, int, int, str]],
+                       width: int = 100) -> str:
+    """ASCII queue-utilization chart (paper Fig. 5 analogue).
+
+    Each queue gets a lane; each distinct event name gets a glyph; a cell is
+    filled if any event of that name is active in the cell's time bucket.
+    """
+    if not rows:
+        return "(no events)"
+    t0 = min(r[1] for r in rows)
+    t1 = max(r[2] for r in rows)
+    span = max(1, t1 - t0)
+    names: List[str] = []
+    for r in rows:
+        if r[3] not in names:
+            names.append(r[3])
+    glyph = {n: _GLYPHS[i % len(_GLYPHS)] for i, n in enumerate(names)}
+    queues: Dict[str, List[str]] = {}
+    for q, s, e, n in rows:
+        lane = queues.setdefault(q, [" "] * width)
+        c0 = int((s - t0) / span * (width - 1))
+        c1 = max(c0, int((e - t0) / span * (width - 1)))
+        for c in range(c0, c1 + 1):
+            lane[c] = glyph[n]
+    buf = io.StringIO()
+    buf.write(f"time span: {span / 1e9:.6f}s  "
+              f"({span / width / 1e6:.3f} ms/cell)\n")
+    qn_width = max(len(q) for q in queues)
+    for q, lane in queues.items():
+        buf.write(f"{q:>{qn_width}s} |{''.join(lane)}|\n")
+    buf.write("\nlegend: " + "  ".join(f"{glyph[n]}={n}" for n in names) + "\n")
+    return buf.getvalue()
+
+
+def queue_chart(prof: Prof, width: int = 100) -> str:
+    infos = prof.iter_infos()
+    return render_queue_chart(
+        [(i.queue, i.t_start, i.t_end, i.name) for i in infos], width)
+
+
+__all__ = ["export_table", "parse_table", "render_queue_chart", "queue_chart"]

@@ -1,0 +1,293 @@
+"""Profiler module — ``CCLProf`` and friends (paper §4.3).
+
+Queues remember their events; the profiler is handed whole queues after the
+computation and derives, exactly as cf4ocl does:
+
+* **Aggregate event information** (:class:`ProfAgg`) — absolute and relative
+  durations of all events with the same name (falling back to command type
+  when unnamed);
+* **Non-aggregate event information** (:class:`ProfInfo`) — name, queue,
+  instants per event;
+* **Event instants** (:class:`ProfInst`) — start/end timestamp stream;
+* **Event overlaps** (:class:`ProfOverlap`) — time pairs of events spent
+  simultaneously in flight.  Overlaps can only occur between different
+  queues; the sweep-line below naturally yields zero overlap for a single
+  ordered queue.
+
+Plus ``get_summary()`` (paper Fig. 3) and the export path used by
+``plot_events`` (paper Fig. 5).
+
+This module is pure algorithm — it ports from the paper essentially
+unchanged (DESIGN.md §2 table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from ..core.errors import Code, ErrBox, raise_or_record
+from ..core.event import Event, now_ns
+from ..core.queue import DispatchQueue
+
+
+class Sort(enum.Flag):
+    """Sort flags for summaries (CCL_PROF_*_SORT_* analogue)."""
+
+    NAME = enum.auto()
+    TIME = enum.auto()        # aggregates: by absolute time
+    DURATION = enum.auto()    # overlaps: by overlap duration
+    ASC = enum.auto()
+    DESC = enum.auto()
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfInfo:
+    """Non-aggregate, event-specific information."""
+
+    name: str
+    command_type: str
+    queue: str
+    t_submit: int
+    t_start: int
+    t_end: int
+
+    @property
+    def duration(self) -> int:
+        return self.t_end - self.t_start
+
+
+class InstType(enum.Enum):
+    START = "start"
+    END = "end"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfInst:
+    """A single event instant."""
+
+    name: str
+    queue: str
+    type: InstType
+    instant: int
+    event_index: int
+
+
+@dataclasses.dataclass
+class ProfAgg:
+    """Aggregate duration of all events sharing a name."""
+
+    name: str
+    absolute_time: int = 0     # ns
+    relative_time: float = 0.0
+    count: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfOverlap:
+    """Total simultaneous-execution time between two event names."""
+
+    event1: str
+    event2: str
+    duration: int  # ns
+
+
+class Prof:
+    """``CCLProf`` analogue."""
+
+    def __init__(self):
+        self._queues: Dict[str, DispatchQueue] = {}
+        self._t_start: Optional[int] = None
+        self._t_stop: Optional[int] = None
+        self._calced = False
+        self.infos: List[ProfInfo] = []
+        self.insts: List[ProfInst] = []
+        self.aggs: Dict[str, ProfAgg] = {}
+        self.overlaps: List[ProfOverlap] = []
+
+    # -- lifecycle (ccl_prof_start/stop) -------------------------------------
+    def start(self) -> None:
+        self._t_start = now_ns()
+
+    def stop(self) -> None:
+        self._t_stop = now_ns()
+
+    def time_elapsed(self) -> float:
+        """Host-measured elapsed seconds between start() and stop()."""
+        if self._t_start is None or self._t_stop is None:
+            return 0.0
+        return (self._t_stop - self._t_start) / 1e9
+
+    # -- input ------------------------------------------------------------------
+    def add_queue(self, name: str, queue: DispatchQueue,
+                  err: Optional[ErrBox] = None) -> None:
+        if not queue.profiling:
+            raise_or_record(err, Code.PROFILING_INFO_NOT_AVAILABLE,
+                            f"Queue {queue.name!r} was created without "
+                            f"profiling enabled")
+            return
+        self._queues[name] = queue
+
+    def add_events(self, queue_name: str, events: Iterable[Event]) -> None:
+        """Direct event injection (for replaying saved traces)."""
+        for e in events:
+            e.complete()
+            self.infos.append(ProfInfo(e.name, e.command_type, queue_name,
+                                       e.t_submit, e.t_start or e.t_submit,
+                                       e.t_end))
+        self._calced = False
+
+    # -- the analysis (ccl_prof_calc) -----------------------------------------
+    def calc(self, err: Optional[ErrBox] = None) -> None:
+        for qname, q in self._queues.items():
+            q.finish()
+            self.add_events(qname, q.events)
+        if not self.infos:
+            raise_or_record(err, Code.PROFILING_INFO_NOT_AVAILABLE,
+                            "No events to profile")
+            return
+        self._build_instants()
+        self._build_aggregates()
+        self._build_overlaps()
+        self._calced = True
+
+    def _build_instants(self) -> None:
+        self.insts = []
+        for i, info in enumerate(self.infos):
+            self.insts.append(ProfInst(info.name, info.queue, InstType.START,
+                                       info.t_start, i))
+            self.insts.append(ProfInst(info.name, info.queue, InstType.END,
+                                       info.t_end, i))
+        # END before START at equal instants so zero-length gaps don't
+        # register as overlap.
+        self.insts.sort(key=lambda s: (s.instant, s.type is InstType.START))
+
+    def _build_aggregates(self) -> None:
+        self.aggs = {}
+        total = 0
+        for info in self.infos:
+            agg = self.aggs.setdefault(info.name, ProfAgg(info.name))
+            agg.absolute_time += info.duration
+            agg.count += 1
+            total += info.duration
+        for agg in self.aggs.values():
+            agg.relative_time = agg.absolute_time / total if total else 0.0
+
+    def _build_overlaps(self) -> None:
+        """Sweep-line over instants accumulating pairwise in-flight time."""
+        open_events: Dict[int, ProfInfo] = {}
+        acc: Dict[Tuple[str, str], int] = defaultdict(int)
+        last_instant: Optional[int] = None
+        for inst in self.insts:
+            if last_instant is not None and len(open_events) >= 2:
+                dt = inst.instant - last_instant
+                if dt > 0:
+                    names = sorted(i.name for i in open_events.values())
+                    for a in range(len(names)):
+                        for b in range(a + 1, len(names)):
+                            acc[(names[a], names[b])] += dt
+            if inst.type is InstType.START:
+                open_events[inst.event_index] = self.infos[inst.event_index]
+            else:
+                open_events.pop(inst.event_index, None)
+            last_instant = inst.instant
+        self.overlaps = [ProfOverlap(k[0], k[1], v)
+                         for k, v in acc.items() if v > 0]
+
+    # -- accessors ---------------------------------------------------------------
+    def _require_calc(self) -> None:
+        if not self._calced:
+            self.calc()
+
+    def get_agg(self, name: str) -> Optional[ProfAgg]:
+        self._require_calc()
+        return self.aggs.get(name)
+
+    def iter_aggs(self, sort: Sort = Sort.TIME | Sort.DESC) -> List[ProfAgg]:
+        self._require_calc()
+        items = list(self.aggs.values())
+        key = (lambda a: a.name) if Sort.NAME in sort else \
+            (lambda a: a.absolute_time)
+        return sorted(items, key=key, reverse=Sort.DESC in sort)
+
+    def iter_overlaps(self, sort: Sort = Sort.DURATION | Sort.DESC
+                      ) -> List[ProfOverlap]:
+        self._require_calc()
+        key = (lambda o: (o.event1, o.event2)) if Sort.NAME in sort else \
+            (lambda o: o.duration)
+        return sorted(self.overlaps, key=key, reverse=Sort.DESC in sort)
+
+    def iter_infos(self) -> List[ProfInfo]:
+        self._require_calc()
+        return sorted(self.infos, key=lambda i: i.t_start)
+
+    # -- derived totals ------------------------------------------------------------
+    def total_events_time(self) -> int:
+        """Sum of all event durations (not dedup'd for overlap)."""
+        self._require_calc()
+        return sum(i.duration for i in self.infos)
+
+    def total_events_eff_time(self) -> int:
+        """Union of busy intervals (overlap counted once) — the paper's
+        'Tot. of all events (eff.)'."""
+        self._require_calc()
+        spans = sorted((i.t_start, i.t_end) for i in self.infos)
+        total = 0
+        cur_s: Optional[int] = None
+        cur_e = 0
+        for s, e in spans:
+            if cur_s is None:
+                cur_s, cur_e = s, e
+            elif s <= cur_e:
+                cur_e = max(cur_e, e)
+            else:
+                total += cur_e - cur_s
+                cur_s, cur_e = s, e
+        if cur_s is not None:
+            total += cur_e - cur_s
+        return total
+
+    # -- summary (paper Fig. 3) -------------------------------------------------
+    def get_summary(self,
+                    agg_sort: Sort = Sort.TIME | Sort.DESC,
+                    ovlp_sort: Sort = Sort.DURATION | Sort.DESC) -> str:
+        self._require_calc()
+        lines = []
+        lines.append(" Aggregate event statistics")
+        lines.append(" " + "-" * 68)
+        lines.append(f" {'Event name':28s} | {'Rel. time (%)':>13s} | "
+                     f"{'Abs. time (s)':>13s}")
+        lines.append(" " + "-" * 68)
+        for agg in self.iter_aggs(agg_sort):
+            lines.append(f" {agg.name:28.28s} | {agg.relative_time * 100:13.4f}"
+                         f" | {agg.absolute_time / 1e9:13.4e}")
+        lines.append(" " + "-" * 68)
+        tot = self.total_events_time()
+        lines.append(f" {'Total':28s} | {'':13s} | {tot / 1e9:13.4e}")
+        ov = self.iter_overlaps(ovlp_sort)
+        if ov:
+            lines.append("")
+            lines.append(" Event overlaps")
+            lines.append(" " + "-" * 68)
+            lines.append(f" {'Event 1':22s} | {'Event 2':22s} | "
+                         f"{'Overlap (s)':>13s}")
+            lines.append(" " + "-" * 68)
+            for o in ov:
+                lines.append(f" {o.event1:22.22s} | {o.event2:22.22s} | "
+                             f"{o.duration / 1e9:13.4e}")
+            lines.append(" " + "-" * 68)
+            lines.append(f" {'Total':22s} | {'':22s} | "
+                         f"{sum(o.duration for o in ov) / 1e9:13.4e}")
+        lines.append("")
+        lines.append(f" Tot. of all events (eff.) : "
+                     f"{self.total_events_eff_time() / 1e9:e}s")
+        if self._t_start is not None and self._t_stop is not None:
+            lines.append(f" Total elapsed time        : "
+                         f"{self.time_elapsed():e}s")
+        return "\n".join(lines)
+
+
+__all__ = ["Prof", "ProfAgg", "ProfInfo", "ProfInst", "ProfOverlap",
+           "InstType", "Sort"]

@@ -1,0 +1,81 @@
+"""Serve-step factories: prefill (context → cache + first logits) and
+decode (one token against a standing cache).
+
+Rolling-buffer alignment: sliding-window layers collected a full-sequence
+K/V during prefill; ``align_prefill_cache`` slices the last ``window``
+positions and rolls them so slot j holds absolute position ≡ j (mod W),
+which is the invariant the decode path maintains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import ShardCtx, use_ctx
+from ..models import model as M
+from ..models.attention import KVCache
+
+
+def make_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
+    pcfg = dataclasses.replace(cfg, collect_kv=True)
+
+    def prefill_step(params, tokens, ctx_embed=None):
+        with use_ctx(ctx):
+            hidden, cache, _ = M.forward(pcfg, params, tokens,
+                                         ctx_embed=ctx_embed)
+            logits = M.logits_fn(pcfg, params, hidden[:, -1:])
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
+    def decode_step(params, cache, token, pos):
+        with use_ctx(ctx):
+            return M.decode_step(cfg, params, cache, token, pos)
+
+    return decode_step
+
+
+def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
+                        target_len: Optional[int] = None) -> Dict:
+    """Convert prefill-collected caches to decode layout.
+
+    * sliding-window layers: slice the last ``window`` positions and roll
+      so slot j holds absolute position ≡ j (mod W);
+    * full-attention layers: pad with zero slots up to ``target_len`` (the
+      decode budget) — unwritten slots are masked by the position test.
+    """
+    out = {k: v for k, v in cache.items() if k != "groups"}
+    groups = []
+    for gi, (pattern, count) in enumerate(cfg.groups):
+        pos_caches = []
+        for pi, (mixer, _) in enumerate(pattern):
+            c = cache["groups"][gi][pi]
+            if isinstance(c, KVCache):
+                kind = "full" if mixer == "self_cross" else mixer
+                W = cfg.cache_len(kind, seq_len)
+                S = c.k.shape[-2]
+                if W < S:  # rolling buffer
+                    k = c.k[..., -W:, :]
+                    v = c.v[..., -W:, :]
+                    shift = seq_len % W
+                    k = jnp.roll(k, shift, axis=-2)
+                    v = jnp.roll(v, shift, axis=-2)
+                    c = KVCache(k, v)
+                elif kind in ("full", "global_nope") and target_len and \
+                        target_len > S:
+                    pad = [(0, 0)] * c.k.ndim
+                    pad[-2] = (0, target_len - S)
+                    c = KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad))
+            pos_caches.append(c)
+        groups.append(tuple(pos_caches))
+    out["groups"] = groups
+    return out
+
+
+__all__ = ["make_prefill_step", "make_decode_step", "align_prefill_cache"]

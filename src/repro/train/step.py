@@ -1,0 +1,92 @@
+"""Train-step factory: loss → grads → AdamW update, with microbatch
+gradient accumulation, remat, and sharding constraints from the ambient
+ShardCtx.  The returned function is a pure (state, batch) → (state, metrics)
+suitable for ``core.Program`` AOT lowering (the dry-run path) or eager jit
+(the example trainer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import ShardCtx, use_ctx
+from ..models import model as M
+from ..optim.adamw import (AdamWConfig, OptState, apply_updates,
+                           init_opt_state)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    step: jax.Array
+
+
+def init_train_state(cfg: M.ModelConfig, opt_cfg: AdamWConfig, key
+                     ) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(params, init_opt_state(opt_cfg, params),
+                      jnp.zeros((), jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    microbatches: int = 1          # gradient-accumulation factor
+    grad_compress: str = "none"    # none | bf16 — DP all-reduce compression
+
+
+def make_train_step(cfg: M.ModelConfig, opt_cfg: AdamWConfig,
+                    step_cfg: StepConfig = StepConfig(),
+                    ctx: Optional[ShardCtx] = None):
+    """Build the train step.
+
+    ``batch`` = {"tokens": (B,T) i32, "labels": (B,T) i32
+                 [, "ctx_embed": (B,S_ctx,D)]}.
+    """
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch["tokens"], batch["labels"],
+                         ctx_embed=batch.get("ctx_embed"))
+
+    def grads_of(params, batch):
+        if step_cfg.microbatches <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+        n = step_cfg.microbatches
+
+        def micro(carry, mb):
+            loss_acc, grad_acc = carry
+            l, g = jax.value_and_grad(loss_of)(params, mb)
+            if step_cfg.grad_compress == "bf16":
+                g = jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+            grad_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                    grad_acc, g)
+            return (loss_acc + l, grad_acc), None
+
+        acc_dt = jnp.bfloat16 if step_cfg.grad_compress == "bf16" \
+            else jnp.float32
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+        mbs = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+        (loss, grads), _ = jax.lax.scan(
+            micro, (jnp.zeros((), jnp.float32), zeros), mbs)
+        inv = 1.0 / n
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        with use_ctx(ctx):
+            loss, grads = grads_of(state.params, batch)
+            new_params, new_opt, gnorm = apply_updates(
+                opt_cfg, state.params, grads, state.opt)
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm,
+                           "lr_step": state.step + 1}
+
+    return train_step
+
+
+__all__ = ["TrainState", "init_train_state", "StepConfig", "make_train_step"]

@@ -1,0 +1,141 @@
+"""Fault-tolerant trainer: the full-stack loop used by examples/ and
+integration tests.
+
+Wires together every substrate: TokenStream (PRNG-kernel data),
+make_train_step (jit'd), CheckpointManager (async, auto-resume),
+Supervisor/Heartbeat (failure detection), DispatchQueues + Prof
+(the paper's integrated profiling over the whole loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from ..ckpt.checkpoint import CheckpointManager
+from ..core.context import Context
+from ..core.queue import DispatchQueue
+from ..data.pipeline import TokenStream
+from ..dist.sharding import ShardCtx
+from ..ft.supervisor import Heartbeat, Supervisor
+from ..models import model as M
+from ..optim.adamw import AdamWConfig
+from ..prof import Prof
+from .step import StepConfig, TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    seed: int = 0
+    profile: bool = True
+    data_cycle: int = 0                  # finite-epoch data (see TokenStream)
+    fail_at_step: Optional[int] = None   # fault-injection for tests
+
+
+class Trainer:
+    def __init__(self, cfg: M.ModelConfig, opt_cfg: AdamWConfig,
+                 tcfg: TrainerConfig,
+                 context: Optional[Context] = None,
+                 shard_ctx: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.context = context or Context.new_accel()
+        self.shard_ctx = shard_ctx
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.sup = Supervisor(expected_workers=1, dead_after_s=60)
+        self.hb = Heartbeat(self.sup, "worker0", interval_s=5).start()
+        self.prof = Prof()
+        self.q_train = DispatchQueue(self.context, "Train")
+        self.metrics_log: List[Dict] = []
+
+        self.step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, StepConfig(), shard_ctx),
+            donate_argnums=(0,))
+
+    # -- state ------------------------------------------------------------
+    def init_or_resume(self) -> TrainState:
+        latest = self.ckpt.latest_step()
+        state = init_train_state(self.cfg, self.opt_cfg,
+                                 jax.random.PRNGKey(self.tcfg.seed))
+        if latest is not None:
+            restored = self.ckpt.restore(state, step=latest)
+            if restored is not None:
+                print(f"[trainer] resumed from step {latest}")
+                return restored
+        return state
+
+    # -- loop ----------------------------------------------------------------
+    def run(self) -> Dict:
+        t = self.tcfg
+        stream = TokenStream(t.batch, t.seq, self.cfg.vocab,
+                             context=self.context, cycle=t.data_cycle)
+        state = self.init_or_resume()
+        start = int(state.step)
+        self.prof.start()
+        t0 = time.perf_counter()
+        for step in range(start, t.total_steps):
+            if t.fail_at_step is not None and step == t.fail_at_step and \
+                    self.ckpt.latest_step() is not None:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = next(stream)
+            state, metrics = self.q_train.enqueue(
+                self.step_fn, state, batch, name="TRAIN_STEP")
+            self.hb.advance(step)
+            if (step + 1) % t.ckpt_every == 0 or step + 1 == t.total_steps:
+                self.q_train.finish()
+                self.ckpt.save(step + 1, state)
+            if (step + 1) % t.log_every == 0:
+                self.q_train.finish()
+                loss = float(metrics["loss"])
+                self.metrics_log.append({"step": step + 1, "loss": loss})
+                print(f"[trainer] step {step + 1} loss {loss:.4f}")
+        self.q_train.finish()
+        self.ckpt.wait()
+        self.prof.stop()
+        if t.profile:
+            if stream.queue is not None:
+                self.prof.add_queue("DataGen", stream.queue)
+            self.prof.add_queue("Train", self.q_train)
+            self.prof.calc()
+        self.hb.stop()
+        wall = time.perf_counter() - t0
+        return {
+            "final_step": t.total_steps,
+            "final_loss": self.metrics_log[-1]["loss"]
+            if self.metrics_log else None,
+            "wall_s": wall,
+            "metrics": self.metrics_log,
+        }
+
+    def summary(self) -> str:
+        return self.prof.get_summary()
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      max_restarts: int = 2) -> Dict:
+    """Supervise a trainer: on failure, rebuild and auto-resume from the
+    last durable checkpoint (the restart path exercised by tests)."""
+    attempts = 0
+    while True:
+        tr = make_trainer()
+        try:
+            return tr.run()
+        except RuntimeError as e:
+            attempts += 1
+            print(f"[supervisor] worker failed ({e}); "
+                  f"restart {attempts}/{max_restarts}")
+            if attempts > max_restarts:
+                raise
+
+
+__all__ = ["Trainer", "TrainerConfig", "run_with_restarts"]

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the real (1-device) CPU backend —
+# the 512-device XLA flag is set ONLY inside launch/dryrun (per spec).
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

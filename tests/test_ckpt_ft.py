@@ -1,0 +1,124 @@
+"""Checkpointing (async, integrity, reshard) and fault-tolerance state
+machine (heartbeats, stragglers, restart planning)."""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core.errors import Code, ErrBox
+from repro.ft.supervisor import Heartbeat, Supervisor, WorkerState
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+class TestCheckpoint:
+    def test_roundtrip_sync(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        m.save(10, tree())
+        out = m.restore(tree())
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree()["a"]))
+        assert m.latest_step() == 10
+
+    def test_roundtrip_async_and_gc(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+        for s in (1, 2, 3, 4):
+            t = jax.tree.map(lambda x: x * s, tree())
+            m.save(s, t)
+        m.wait()
+        kept = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert len(kept) == 2 and kept[-1].endswith("4")
+        out = m.restore(tree())
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree()["a"]) * 4)
+
+    def test_corruption_detected(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        m.save(5, tree())
+        shard = next(tmp_path.glob("step_*/shard_0.npz"))
+        shard.write_bytes(shard.read_bytes()[:-7] + b"garbage")
+        box = ErrBox()
+        assert m.restore(tree(), err=box) is None
+        assert box.code == Code.CHECKPOINT_CORRUPT
+
+    def test_structure_mismatch_detected(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        m.save(5, tree())
+        box = ErrBox()
+        bad = {"a": jnp.zeros((3, 4)), "zz": jnp.zeros((5,))}
+        assert m.restore(bad, err=box) is None
+        assert box.code == Code.ELASTIC_RESHAPE_FAILURE
+
+    def test_elastic_restore_with_shardings(self, tmp_path):
+        """Restore applies the *current* shardings (mesh-B placement)."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        m.save(7, tree())
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+        sh = {"a": NamedSharding(mesh, P("data")),
+              "b": {"c": NamedSharding(mesh, P())}}
+        out = m.restore(tree(), shardings=sh)
+        assert out["a"].sharding.spec == P("data")
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class TestSupervisor:
+    def test_straggler_then_recovery(self):
+        clk = FakeClock()
+        sup = Supervisor(4, dead_after_s=30, straggler_factor=2.0, clock=clk)
+        for step in range(5):
+            for w in range(4):
+                sup.beat(f"w{w}", step)
+            clk.advance(1.0)
+        # w3 stalls for 5s (median step ~1s)
+        for step in range(5, 8):
+            for w in range(3):
+                sup.beat(f"w{w}", step)
+            clk.advance(1.0)
+        states = sup.check()
+        assert states["w3"] is WorkerState.STRAGGLER
+        assert states["w0"] is WorkerState.HEALTHY
+        sup.beat("w3", 8)
+        assert sup.check()["w3"] is WorkerState.HEALTHY
+        assert ("recovered", "w3") in [(e[0], e[1]) for e in sup.events]
+
+    def test_death_and_restart_plan(self):
+        clk = FakeClock()
+        sup = Supervisor(4, dead_after_s=10, clock=clk)
+        for w in range(4):
+            sup.beat(f"w{w}", 0)
+        clk.advance(11.0)
+        for w in range(3):
+            sup.beat(f"w{w}", 1)
+        assert sup.should_restart()
+        plan = sup.plan_restart(devices_per_worker=8)
+        assert plan["workers"] == 2           # largest pow2 ≤ 3 survivors
+        assert plan["devices"] == 16
+        assert "w3" not in plan["survivors"]
+
+    def test_heartbeat_thread(self):
+        sup = Supervisor(1, dead_after_s=5)
+        hb = Heartbeat(sup, "w0", interval_s=0.05).start()
+        import time
+        time.sleep(0.2)
+        hb.advance(3)
+        hb.stop()
+        assert sup.workers["w0"].last_step == 3
+        assert sup.healthy_count() == 1

@@ -1,0 +1,44 @@
+"""CLI utilities smoke tests (devinfo, plot_events; cclc covered by the
+dry-run integration which exercises the same path)."""
+
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def run_cli(mod, *args):
+    return subprocess.run(
+        [sys.executable, "-m", mod, *args],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        cwd=pathlib.Path(__file__).resolve().parents[1])
+
+
+def test_devinfo():
+    r = run_cli("repro.cli.devinfo", "--all")
+    assert r.returncode == 0, r.stderr
+    assert "Platform: cpu" in r.stdout
+    assert "PEAK_BF16_FLOPS" in r.stdout
+
+
+def test_devinfo_custom_query():
+    r = run_cli("repro.cli.devinfo", "--custom", "KIND", "VMEM_BYTES")
+    assert r.returncode == 0
+    assert "VMEM_BYTES" in r.stdout and "NAME" not in r.stdout.split(
+        "Device")[1]
+
+
+def test_cclc_list():
+    r = run_cli("repro.cli.cclc", "--list", "--single-device")
+    assert r.returncode == 0, r.stderr
+    assert "llama3_8b" in r.stdout and "train_4k" in r.stdout
+
+
+def test_plot_events(tmp_path):
+    table = tmp_path / "t.tsv"
+    table.write_text("Main\t0\t100\tKERNEL\nComms\t50\t150\tREAD\n")
+    r = run_cli("repro.cli.plot_events", str(table), "--width", "40")
+    assert r.returncode == 0, r.stderr
+    assert "Main" in r.stdout and "legend:" in r.stdout

@@ -1,0 +1,96 @@
+"""PRNG kernel sweeps vs the numpy uint64 oracle (the paper's exact device
+code) + hypothesis properties of the 64-bit pair arithmetic."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import jax.numpy as jnp
+
+from repro.kernels.xorshift_prng import ops, ref
+from repro.kernels.xorshift_prng.xorshift_prng import init_pallas, rng_pallas
+
+
+@pytest.mark.parametrize("n,block_rows", [
+    (1024, 8), (5000, 8), (65536, 64), (100_000, 128),
+])
+def test_init_matches_u64_oracle(n, block_rows):
+    st_ = ops.prng_init(n, block_rows=block_rows)
+    gids = np.arange(st_.hi.size, dtype=np.uint32)
+    truth = ref.init_ref_np64(gids)
+    mine = ref.pair_to_u64(np.asarray(st_.hi).ravel(),
+                           np.asarray(st_.lo).ravel())
+    live = gids < n
+    np.testing.assert_array_equal(mine[live], truth[live])
+    assert (mine[~live] == 0).all()
+
+
+@pytest.mark.parametrize("steps", [1, 3])
+def test_rng_steps_match_u64_oracle(steps):
+    n = 4096
+    st_ = ops.prng_init(n, block_rows=8)
+    truth = ref.init_ref_np64(np.arange(st_.hi.size, dtype=np.uint32))
+    for _ in range(steps):
+        st_ = ops.prng_step(st_, block_rows=8)
+        truth = ref.rng_ref_np64(truth)
+    live = np.arange(st_.hi.size) < n
+    mine = ref.pair_to_u64(np.asarray(st_.hi).ravel(),
+                           np.asarray(st_.lo).ravel())
+    np.testing.assert_array_equal(mine[live], truth[live])
+
+
+def test_pallas_equals_jnp_ref_path():
+    a = ops.prng_init(3000, block_rows=8, use_pallas=True)
+    b = ops.prng_init(3000, block_rows=8, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a.hi), np.asarray(b.hi))
+    np.testing.assert_array_equal(np.asarray(a.lo), np.asarray(b.lo))
+
+
+def test_uniform_and_tokens_ranges():
+    s = ops.prng_step(ops.prng_init(10_000, block_rows=8), block_rows=8)
+    u = np.asarray(ops.to_uniform(s.hi, s.lo))
+    assert (u >= 0).all() and (u < 1).all()
+    t = np.asarray(ops.to_tokens(s.hi, 50_000))
+    assert (t >= 0).all() and (t < 50_000).all()
+
+
+class TestPairArithmeticProperties:
+    """(hi, lo) uint32-pair ops must match numpy uint64 exactly."""
+
+    @given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=64))
+    @settings(max_examples=80, deadline=None)
+    def test_xorshift_pair_matches_u64(self, vals):
+        v = np.array(vals, dtype=np.uint64)
+        hi = jnp.asarray((v >> np.uint64(32)).astype(np.uint32))
+        lo = jnp.asarray((v & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+        h2, l2 = ref.xorshift64_pair(hi, lo)
+        mine = ref.pair_to_u64(np.asarray(h2), np.asarray(l2))
+        np.testing.assert_array_equal(mine, ref.rng_ref_np64(v))
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=100, deadline=None)
+    def test_hashes_match_numpy(self, g):
+        gid = np.array([g], np.uint32)
+        truth = ref.init_ref_np64(gid)[0]
+        hi, lo = ref.init_ref(jnp.asarray(gid))
+        assert ref.pair_to_u64(np.asarray(hi), np.asarray(lo))[0] == truth
+
+
+def test_statistical_sanity():
+    """Dieharder-lite: monobit + byte chi² on 1M bits from the kernel."""
+    s = ops.prng_init(65536, block_rows=64)
+    s = ops.prng_step(s, block_rows=64)
+    s = ops.prng_step(s, block_rows=64)
+    vals = ops.to_uint64(s)
+    bits = np.unpackbits(vals.view(np.uint8))
+    n = bits.size
+    ones = bits.sum()
+    z = abs(ones - n / 2) / np.sqrt(n / 4)
+    assert z < 5, f"monobit z={z}"
+    bytes_ = vals.view(np.uint8)
+    counts = np.bincount(bytes_, minlength=256)
+    expected = bytes_.size / 256
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    # 255 dof: mean 255, sd ~22.6 — allow 6 sd
+    assert chi2 < 255 + 6 * 22.6, f"byte chi2={chi2}"

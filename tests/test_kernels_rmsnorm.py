@@ -1,0 +1,40 @@
+"""RMSNorm kernel sweep vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("rows,d", [(8, 128), (384, 1024), (100, 256),
+                                    (7, 512)])
+@pytest.mark.parametrize("plus_one", [False, True])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_rmsnorm_sweep(rows, d, plus_one, dtype, tol):
+    x = jax.random.normal(KEY, (rows, d), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(4), (d,), dtype)
+    a = rmsnorm(x, w, plus_one=plus_one)
+    b = rmsnorm_ref(x, w, plus_one=plus_one)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol, rtol=tol)
+
+
+def test_rmsnorm_3d_reshape():
+    x = jax.random.normal(KEY, (2, 16, 256))
+    w = jnp.ones((256,))
+    a = rmsnorm(x, w)
+    b = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_rmsnorm_unit_variance():
+    x = jax.random.normal(KEY, (64, 512)) * 17.0
+    y = np.asarray(rmsnorm(x, jnp.ones((512,))))
+    rms = np.sqrt((y ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)

@@ -1,0 +1,125 @@
+"""Profiler algebra tests — unit + hypothesis properties."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.prof import Prof, Sort
+from repro.prof.export import parse_table, render_queue_chart
+from repro.prof.profiler import ProfInfo
+
+
+def make_prof(infos):
+    p = Prof()
+    p.infos = list(infos)
+    p._build_instants()
+    p._build_aggregates()
+    p._build_overlaps()
+    p._calced = True
+    return p
+
+
+PAPER_CASE = [
+    ProfInfo("INIT_KERNEL", "NDRANGE", "Main", 0, 0, 10),
+    ProfInfo("RNG_KERNEL", "NDRANGE", "Main", 10, 12, 30),
+    ProfInfo("READ_BUFFER", "READ", "Comms", 11, 15, 40),
+    ProfInfo("RNG_KERNEL", "NDRANGE", "Main", 31, 42, 60),
+]
+
+
+class TestUnit:
+    def test_aggregates(self):
+        p = make_prof(PAPER_CASE)
+        agg = p.get_agg("RNG_KERNEL")
+        assert agg.absolute_time == (30 - 12) + (60 - 42)
+        assert agg.count == 2
+        total = sum(a.absolute_time for a in p.aggs.values())
+        assert abs(sum(a.relative_time for a in p.aggs.values()) - 1) < 1e-9
+        assert total == p.total_events_time()
+
+    def test_overlap_pairwise(self):
+        p = make_prof(PAPER_CASE)
+        assert len(p.overlaps) == 1
+        o = p.overlaps[0]
+        assert {o.event1, o.event2} == {"RNG_KERNEL", "READ_BUFFER"}
+        assert o.duration == 15  # [15,30)
+
+    def test_eff_time_union(self):
+        p = make_prof(PAPER_CASE)
+        assert p.total_events_eff_time() == 10 + 28 + 18
+
+    def test_summary_contains_sections(self):
+        p = make_prof(PAPER_CASE)
+        s = p.get_summary()
+        assert "Aggregate event statistics" in s
+        assert "Event overlaps" in s
+        assert "RNG_KERNEL" in s
+
+    def test_sorting(self):
+        p = make_prof(PAPER_CASE)
+        by_time = p.iter_aggs(Sort.TIME | Sort.DESC)
+        assert by_time[0].name == "RNG_KERNEL"
+        by_name = p.iter_aggs(Sort.NAME | Sort.ASC)
+        assert [a.name for a in by_name] == sorted(a.name for a in by_name)
+
+    def test_export_parse_roundtrip(self, tmp_path):
+        from repro.prof.export import export_table
+        p = make_prof(PAPER_CASE)
+        f = tmp_path / "t.tsv"
+        export_table(p, str(f))
+        rows = parse_table(f.read_text())
+        assert len(rows) == 4
+        chart = render_queue_chart(rows, width=40)
+        assert "Main" in chart and "Comms" in chart
+
+
+@st.composite
+def info_lists(draw):
+    n = draw(st.integers(1, 24))
+    out = []
+    for i in range(n):
+        start = draw(st.integers(0, 1000))
+        dur = draw(st.integers(0, 200))
+        q = draw(st.sampled_from(["Q0", "Q1", "Q2"]))
+        name = draw(st.sampled_from(["A", "B", "C", "D"]))
+        out.append(ProfInfo(name, "T", q, start, start, start + dur))
+    return out
+
+
+class TestProperties:
+    @given(info_lists())
+    @settings(max_examples=60, deadline=None)
+    def test_eff_time_bounds(self, infos):
+        """union ≤ Σ durations; union ≥ max duration; union ≤ span."""
+        p = make_prof(infos)
+        eff = p.total_events_eff_time()
+        tot = p.total_events_time()
+        span = max(i.t_end for i in infos) - min(i.t_start for i in infos)
+        assert eff <= tot
+        assert eff >= max(i.duration for i in infos)
+        assert eff <= span
+
+    @given(info_lists())
+    @settings(max_examples=60, deadline=None)
+    def test_overlap_consistency(self, infos):
+        """Σ pairwise overlaps == Σ durations − union  when no instant has
+        3+ concurrent events; in general Σ overlaps ≥ that difference."""
+        p = make_prof(infos)
+        ov = sum(o.duration for o in p.overlaps)
+        diff = p.total_events_time() - p.total_events_eff_time()
+        assert ov >= diff - 1  # integer algebra, no tolerance needed
+
+    @given(info_lists())
+    @settings(max_examples=60, deadline=None)
+    def test_overlaps_sorted_names(self, infos):
+        p = make_prof(infos)
+        for o in p.overlaps:
+            assert o.event1 <= o.event2
+            assert o.duration > 0
+
+    @given(info_lists(), st.integers(10, 80))
+    @settings(max_examples=30, deadline=None)
+    def test_chart_never_crashes(self, infos, width):
+        p = make_prof(infos)
+        rows = [(i.queue, i.t_start, i.t_end, i.name) for i in infos]
+        chart = render_queue_chart(rows, width=width)
+        assert "legend:" in chart

@@ -1,0 +1,93 @@
+"""Sharding-rule engine: divisibility fallback + axis-conflict properties."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import DEFAULT_RULES, ShardCtx
+
+
+def fake_mesh(data=4, model=2):
+    """Abstract mesh for rule resolution (no device placement needed)."""
+    devs = np.array(jax.devices() * (data * model))[: data * model]
+    # single CPU device repeated is fine for *spec* computation only
+    return Mesh(devs.reshape(data, model), ("data", "model"))
+
+
+CTX = ShardCtx(fake_mesh())
+
+
+class TestRules:
+    def test_divisible_shards(self):
+        spec = CTX.spec(("vocab", "embed"), (4096, 128))
+        assert spec == P("model", "data")
+
+    def test_indivisible_falls_back(self):
+        # 15 heads on a 2-way model axis → replicate
+        spec = CTX.spec(("heads", None, None), (15, 4, 4))
+        assert spec == P()
+
+    def test_batch_consumes_data_before_embed(self):
+        # activations: batch takes data, embed must NOT also take it
+        spec = CTX.spec(("batch", None, "embed"), (8, 16, 128))
+        assert spec == P("data")
+
+    def test_param_embed_gets_fsdp(self):
+        spec = CTX.spec(("embed", "mlp"), (128, 256))
+        assert spec == P("data", "model")
+
+    def test_axis_used_once(self):
+        spec = CTX.spec(("heads", "kv_heads"), (4, 2))
+        # both want "model"; only the first gets it
+        assert spec == P("model")
+
+    def test_missing_axis_candidate_skipped(self):
+        ctx = ShardCtx(fake_mesh(), rules={"batch": [("pod", "data"),
+                                                     "data"]})
+        # no "pod" axis in mesh → falls to plain data
+        assert ctx.spec(("batch",), (8,)) == P("data")
+
+    def test_no_mesh_no_spec(self):
+        ctx = ShardCtx(None)
+        assert ctx.sharding(("batch",), (8,)) is None
+
+
+@st.composite
+def dims_and_logicals(draw):
+    names = draw(st.lists(
+        st.sampled_from(list(DEFAULT_RULES) + [None]), min_size=1,
+        max_size=5))
+    dims = [draw(st.integers(1, 64)) for _ in names]
+    return tuple(names), tuple(dims)
+
+
+class TestProperties:
+    @given(dims_and_logicals())
+    @settings(max_examples=150, deadline=None)
+    def test_spec_always_legal(self, case):
+        """Every produced spec is loadable: each sharded dim is divisible
+        by its axis product and no mesh axis is used twice."""
+        names, dims = case
+        spec = CTX.spec(names, dims)
+        used = []
+        for i, entry in enumerate(tuple(spec)):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            size = 1
+            for a in axes:
+                assert a in CTX.mesh.shape
+                size *= CTX.mesh.shape[a]
+                used.append(a)
+            assert dims[i] % size == 0
+        assert len(used) == len(set(used)), "mesh axis used twice"
+
+    @given(dims_and_logicals())
+    @settings(max_examples=50, deadline=None)
+    def test_spec_deterministic(self, case):
+        names, dims = case
+        assert CTX.spec(names, dims) == CTX.spec(names, dims)

@@ -1,0 +1,87 @@
+"""Dry-run spec builders: structure, shardings, and divisibility — pure
+metadata tests (no 512-device flag needed; specs computed on an abstract
+mesh)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.dist.sharding import ShardCtx
+from repro.launch import specs as SP
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+
+
+def abstract_mesh(shape=(16, 16), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = np.array([jax.devices()[0]] * n).reshape(shape)
+    return Mesh(devs, axes)
+
+
+CTX = ShardCtx(abstract_mesh())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_match_template(arch):
+    cfg = get_config(arch)
+    specs = SP.param_specs(cfg, CTX)
+    tpl = M.param_template(cfg)
+    from repro.models.layers import ParamTpl
+    tl = jax.tree.leaves(tpl, is_leaf=lambda x: isinstance(x, ParamTpl))
+    sl = jax.tree.leaves(specs)
+    assert len(tl) == len(sl)
+    for t, s in zip(tl, sl):
+        assert tuple(t.shape) == tuple(s.shape)
+        # every sharded dim divisible
+        if s.sharding is not None:
+            parts = tuple(s.sharding.spec)
+            for i, entry in enumerate(parts):
+                if entry is None:
+                    continue
+                axes = (entry,) if isinstance(entry, str) else entry
+                size = int(np.prod([CTX.mesh.shape[a] for a in axes]))
+                assert s.shape[i] % size == 0, (arch, t.shape, parts)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x7b",
+                                  "mamba2-1.3b", "whisper-medium",
+                                  "recurrentgemma-9b"])
+def test_cache_specs_structure_matches_cache_init(arch):
+    cfg = get_config(arch)
+    specs = SP.cache_specs(cfg, CTX, batch=4, seq_len=128)
+    # compare to a real (small) cache
+    small = get_config(arch)
+    real = M.cache_init(small, 4, 128)
+    if cfg.has_cross:
+        real["ctx_enc"] = jnp.zeros((1,))
+    assert jax.tree.structure(specs, is_leaf=lambda x: hasattr(x, "shape")) \
+        .num_leaves == jax.tree.structure(real).num_leaves
+
+
+def test_state_specs_carry_moments_dtype():
+    cfg = get_config("smollm-360m")
+    st = SP.state_specs(cfg, AdamWConfig(moments_dtype="bfloat16"), CTX)
+    m0 = jax.tree.leaves(st.opt.m)[0]
+    assert m0.dtype == jnp.bfloat16
+
+
+def test_batch_specs_sharded_over_data():
+    cfg = get_config("llama3-8b")
+    b = SP.batch_specs(cfg, CTX, 256, 4096)
+    assert tuple(b["tokens"].sharding.spec) == ("data",)
+    assert b["tokens"].shape == (256, 4096)
+
+
+def test_block_probe_specs_all_kinds():
+    cfg = get_config("recurrentgemma-9b")
+    for kind in ("train", "prefill", "decode"):
+        out = SP.block_probe_specs(cfg, CTX, 0, 8, 256, kind)
+        x, lp, caches, ctxe = out
+        assert x.shape[0] == 8
+        assert isinstance(lp, tuple) and len(lp) == 3
+        if kind == "decode":
+            assert caches is not None
