@@ -8,6 +8,8 @@ pretty-printed reports to stderr).
   E4 queue_chart   — paper Fig. 5: queue utilization chart
   E5 prng_quality  — dieharder-lite statistical checks
   E6 roofline      — per-(arch × shape) roofline terms from the dry-run
+  E7 decode_throughput — tokens/s vs cache length, XLA vs fused Pallas
+                     decode path (→ BENCH_decode.json perf trajectory)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [names...]
 """
@@ -155,6 +157,79 @@ def bench_roofline():
               f"dom={r['dominant']};frac={r['roofline_fraction']:.4f}")
 
 
+# ----------------------------------------------------------------- E7 ------
+
+def bench_decode_throughput():
+    """Single-layer fused decode op: tokens/s vs cache length, XLA vs
+    Pallas.  On CPU the Pallas path runs in interpret mode — orders of
+    magnitude slower by construction — so there the benchmark checks
+    *correctness* (paths must agree) and records both curves; on TPU the
+    same harness is the perf gate (pallas ≥ xla).  Results land in
+    BENCH_decode.json so future PRs have a trajectory to regress against.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.decode_attention.ops import decode_attention
+
+    interpret = jax.default_backend() == "cpu"
+    B, Hq, Hkv, D = 4, 8, 2, 64
+    steps = 8
+    key = jax.random.PRNGKey(0)
+    results = {"backend": jax.default_backend(), "interpret": interpret,
+               "shape": {"batch": B, "q_heads": Hq, "kv_heads": Hkv,
+                         "head_dim": D}, "rows": []}
+
+    def run(impl, S, reps):
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (B, Hq, 1, D), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+        kn = jax.random.normal(ks[3], (B, Hkv, 1, D), jnp.float32)
+        vn = jax.random.normal(ks[4], (B, Hkv, 1, D), jnp.float32)
+        half = jnp.where(jnp.arange(S)[None] < S // 2,
+                         jnp.arange(S)[None], -1)
+        pc = jnp.broadcast_to(half, (B, S)).astype(jnp.int32)
+
+        def one_pass():
+            out, ck, cv, cp = None, kc, vc, pc
+            for t in range(steps):
+                out, ck, cv, cp = decode_attention(
+                    q, ck, cv, cp, kn, vn, jnp.int32(S // 2 + t), impl=impl)
+            return jax.block_until_ready(out)
+
+        out = one_pass()                       # warmup (compile)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = one_pass()
+        dt = (time.perf_counter() - t0) / reps
+        return B * steps / dt, dt, out
+
+    cache_lens = [256, 1024, 4096] if not interpret else [64, 256]
+    for S in cache_lens:
+        reps = 3 if not interpret else 1
+        tok_x, dt_x, out_x = run("xla", S, reps)
+        tok_p, dt_p, out_p = run("pallas", S, reps)
+        err = float(np.max(np.abs(np.asarray(out_x, np.float32) -
+                                  np.asarray(out_p, np.float32))))
+        row = {"cache_len": S, "xla_tok_s": tok_x, "pallas_tok_s": tok_p,
+               "max_abs_err": err}
+        results["rows"].append(row)
+        print(f"# decode S={S}: xla={tok_x:,.1f} tok/s "
+              f"pallas={tok_p:,.1f} tok/s ({'interpret' if interpret else 'native'}) "
+              f"max|Δ|={err:.2e}", file=sys.stderr)
+        assert err < 1e-3, f"decode paths diverge at S={S}: {err}"
+        _emit(f"decode_throughput_S{S}_xla", dt_x / steps * 1e6,
+              f"tok_s={tok_x:.1f}")
+        _emit(f"decode_throughput_S{S}_pallas", dt_p / steps * 1e6,
+              f"tok_s={tok_p:.1f}")
+    results["pallas_ge_xla"] = all(
+        r["pallas_tok_s"] >= r["xla_tok_s"] for r in results["rows"])
+    out_path = ROOT / "BENCH_decode.json"
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+
+
 BENCHES = {
     "loc_compare": bench_loc_compare,
     "overhead": bench_overhead,
@@ -162,6 +237,7 @@ BENCHES = {
     "queue_chart": bench_queue_chart,
     "prng_quality": bench_prng_quality,
     "roofline": bench_roofline,
+    "decode_throughput": bench_decode_throughput,
 }
 
 

@@ -15,7 +15,8 @@ from repro.configs import get_smoke_config
 from repro.core import Context, DispatchQueue
 from repro.models.model import init_params
 from repro.prof import Prof, queue_chart
-from repro.serve.step import (align_prefill_cache, make_decode_step,
+from repro.serve.step import (DECODE_EVENT, PREFILL_EVENT,
+                              align_prefill_cache, make_decode_step,
                               make_prefill_step)
 
 
@@ -26,9 +27,13 @@ def main() -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
+                    help="decode path: jnp reference or fused Pallas kernel")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch)
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config(args.arch),
+                              attn_impl=args.attn_impl)
     ctx = Context.new_accel()
     q_prefill = DispatchQueue(ctx, "Prefill")
     q_decode = DispatchQueue(ctx, "Decode")
@@ -45,17 +50,18 @@ def main() -> int:
         ctx_embed = jax.random.normal(
             key, (args.batch, cfg.vis_tokens, cfg.d_model))
 
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
+    # factories return cached jitted steps — rebuilding them is free
+    prefill = make_prefill_step(cfg)
+    decode = make_decode_step(cfg)
 
     prof = Prof()
     prof.start()
     if ctx_embed is not None:
         logits, cache = q_prefill.enqueue(prefill, params, prompts, ctx_embed,
-                                          name="PREFILL")
+                                          name=PREFILL_EVENT)
     else:
         logits, cache = q_prefill.enqueue(prefill, params, prompts,
-                                          name="PREFILL")
+                                          name=PREFILL_EVENT)
     q_prefill.finish()
     cache = align_prefill_cache(cfg, cache, args.prompt_len,
                                 target_len=args.prompt_len + args.tokens)
@@ -65,7 +71,8 @@ def main() -> int:
     for i in range(args.tokens - 1):
         pos = jnp.int32(args.prompt_len + i)
         logits, cache = q_decode.enqueue(decode, params, cache, tok, pos,
-                                         name="DECODE")
+                                         name=DECODE_EVENT,
+                                         command_type=DECODE_EVENT)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         generated.append(tok)
     q_decode.finish()

@@ -26,6 +26,15 @@ from .event import Event
 from .wrapper import Wrapper
 
 
+def _is_ready(out) -> bool:
+    """Non-blocking: True iff every array leaf finished (or was donated)."""
+    try:
+        return all(x.is_ready() for x in jax.tree.leaves(out)
+                   if hasattr(x, "is_ready"))
+    except Exception:  # noqa: BLE001 — deleted/donated ⇒ finished
+        return True
+
+
 class DispatchQueue(Wrapper):
     _counter = 0
 
@@ -38,7 +47,11 @@ class DispatchQueue(Wrapper):
         self.profiling = profiling
         self._events: List[Event] = []
         self._lock = threading.Lock()
-        self._last_outputs: Any = None
+        # outputs of every submission since the last finish() — finish must
+        # block on ALL of them (async dispatch gives no cross-computation
+        # ordering guarantee, so blocking on the last output alone proves
+        # nothing about earlier submissions)
+        self._pending_outputs: List[Any] = []
 
     # -- submission -------------------------------------------------------
     def enqueue(self, fn: Callable[..., Any], *args,
@@ -61,11 +74,15 @@ class DispatchQueue(Wrapper):
             if evt:
                 evt.mark_start()
             out = fn(*args, **kwargs)
-            if evt:
-                evt.attach_outputs(out)
-                with self._lock:
+            with self._lock:
+                if evt:
+                    evt.attach_outputs(out)
                     self._events.append(evt)
-            self._last_outputs = out
+                # drop outputs that already completed so the queue never
+                # pins more than the in-flight window of device buffers
+                self._pending_outputs = [
+                    o for o in self._pending_outputs if not _is_ready(o)]
+                self._pending_outputs.append(out)
             return out
         return None
 
@@ -87,10 +104,11 @@ class DispatchQueue(Wrapper):
                         self._events.append(evt)
                 return host
             fut = arr.copy_to_host_async() if hasattr(arr, "copy_to_host_async") else None
-            if evt:
-                evt.attach_outputs(arr)
-                with self._lock:
+            with self._lock:
+                if evt:
+                    evt.attach_outputs(arr)
                     self._events.append(evt)
+                self._pending_outputs.append(arr)
             return fut if fut is not None else arr
         return None
 
@@ -103,25 +121,40 @@ class DispatchQueue(Wrapper):
             if evt:
                 evt.mark_start()
             buffer.put(host_array)
-            if evt:
-                evt.attach_outputs(buffer.array)
-                with self._lock:
+            with self._lock:
+                if evt:
+                    evt.attach_outputs(buffer.array)
                     self._events.append(evt)
+                self._pending_outputs.append(buffer.array)
             return buffer
         return None
 
     # -- synchronization ----------------------------------------------------
     def finish(self, err: Optional[ErrBox] = None) -> None:
         """``clFinish``: block until every submitted op completed; stamps all
-        pending event end-instants."""
+        pending event end-instants.
+
+        Blocks on the outputs of *every* pending submission (not just the
+        most recent): events complete in submission order, so each span's
+        ``t_end`` reflects its own computation being verifiably done, and
+        un-evented submissions (profiling off) are fenced too.
+        """
         with guard(err) as g:
             with self._lock:
                 pending = [e for e in self._events if e.t_end is None]
+                outputs = self._pending_outputs
+                self._pending_outputs = []
             for e in pending:
                 e.complete()
-            if self._last_outputs is not None:
-                jax.block_until_ready(self._last_outputs)
-                self._last_outputs = None
+            for out in outputs:
+                try:
+                    jax.block_until_ready(out)
+                except RuntimeError as e:
+                    # donated-away buffers mean the op that consumed them
+                    # completed; anything else is a real async failure and
+                    # must reach the caller/ErrBox
+                    if "delet" not in str(e).lower():
+                        raise
             return None
 
     # -- event access (used by the profiler) ---------------------------------

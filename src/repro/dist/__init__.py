@@ -1,0 +1,7 @@
+"""Distribution layer: logical-axis sharding rules and the ambient ShardCtx."""
+
+from .sharding import (DEFAULT_RULES, ShardCtx, rules_variant,
+                       shard_activation, use_ctx)
+
+__all__ = ["DEFAULT_RULES", "ShardCtx", "rules_variant", "shard_activation",
+           "use_ctx"]

@@ -1,0 +1,158 @@
+"""Sharding-rule engine: logical axis names → mesh axes, with divisibility
+fallback.
+
+Parameters and activations are annotated with *logical* axis names
+("embed", "heads", "batch", …).  A :class:`ShardCtx` holds a mesh plus a
+rule table mapping each logical name to an ordered candidate list of mesh
+axes (a candidate may be a single axis or a tuple of axes used together).
+``spec`` resolves names left-to-right; a candidate is taken only if
+
+* every mesh axis it names exists in the mesh,
+* no axis is already consumed by an earlier dim of the same spec,
+* the dim size is divisible by the product of the candidate's axis sizes.
+
+Otherwise the next candidate is tried; with none left the dim replicates.
+This makes every produced spec loadable by construction (property-tested in
+``tests/test_sharding.py``).
+
+``use_ctx``/``shard_activation`` provide the ambient-context mechanism the
+model code uses: layers call ``shard_activation(x, logical)`` and get a
+``with_sharding_constraint`` only when a mesh-bearing ctx is active —
+tests and single-host examples run the exact same code with no mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Candidate = Union[str, Tuple[str, ...]]
+Rules = Dict[str, List[Candidate]]
+
+# Default (FSDP-flavoured) table: batch-like axes over "data" (through the
+# DCN "pod" axis first when present), parameter embed over "data" (FSDP),
+# head/ffn/vocab/expert axes over "model" (TP).  Replicated names keep an
+# empty candidate list so the table doubles as the registry of known
+# logical axes.
+DEFAULT_RULES: Rules = {
+    "batch":      [("pod", "data"), "data"],
+    "embed":      ["data"],
+    "vocab":      ["model"],
+    "mlp":        ["model"],
+    "heads":      ["model"],
+    "kv_heads":   ["model"],
+    "heads_flat": ["model"],
+    "kv_flat":    ["model"],
+    "experts":    ["model"],
+    "seq":        [],
+    "seq_ctx":    [],
+    "layers":     [],
+    "state":      [],
+    "conv":       [],
+}
+
+
+def rules_variant(name: str = "fsdp") -> Rules:
+    """Named rule tables for the dry-run sweeps.
+
+    * ``fsdp``   — the default: params embed-sharded over data + TP.
+    * ``tp``     — tensor-parallel only (no data-axis param sharding);
+      used for the param half of ZeRO-1 (moments keep the fsdp table).
+    * ``moe_tp`` — like ``tp`` but expert dim spread over data×model so
+      the 8-wide expert axis can use more than the model axis.
+    """
+    rules = {k: list(v) for k, v in DEFAULT_RULES.items()}
+    if name in ("fsdp", "default"):
+        return rules
+    if name == "tp":
+        rules["embed"] = []
+        return rules
+    if name == "moe_tp":
+        rules["embed"] = []
+        rules["experts"] = [("data", "model"), "data", "model"]
+        return rules
+    raise KeyError(f"unknown sharding rule variant {name!r}")
+
+
+class ShardCtx:
+    """A mesh + rule table; resolves logical axes to PartitionSpecs."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Rules] = None):
+        self.mesh = mesh
+        self.rules = rules if rules is not None else DEFAULT_RULES
+
+    def spec(self, logical: Sequence[Optional[str]],
+             dims: Sequence[int]) -> P:
+        if self.mesh is None:
+            return P()
+        mesh_shape = dict(self.mesh.shape)
+        used: set = set()
+        entries: List[Optional[Candidate]] = []
+        for name, dim in zip(logical, dims):
+            chosen: Optional[Candidate] = None
+            for cand in (self.rules.get(name, []) if name else []):
+                axes = (cand,) if isinstance(cand, str) else tuple(cand)
+                if any(a not in mesh_shape or a in used for a in axes):
+                    continue
+                size = 1
+                for a in axes:
+                    size *= mesh_shape[a]
+                if dim % size != 0:
+                    continue
+                chosen = cand
+                used.update(axes)
+                break
+            entries.append(chosen)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 dims: Sequence[int]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical, dims))
+
+    def __repr__(self) -> str:
+        axes = dict(self.mesh.shape) if self.mesh is not None else None
+        return f"<ShardCtx mesh={axes}>"
+
+
+# -------------------------------------------------------- ambient context --
+
+_tls = threading.local()
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: Optional[ShardCtx]):
+    """Install ``ctx`` as the ambient sharding context (None = no-op)."""
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _tls.ctx = prev
+
+
+def shard_activation(x: jax.Array,
+                     logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain ``x`` per the ambient ctx; identity when no mesh active."""
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    sh = ctx.sharding(logical, x.shape)
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+__all__ = ["DEFAULT_RULES", "Rules", "ShardCtx", "current_ctx",
+           "rules_variant", "shard_activation", "use_ctx"]

@@ -1,5 +1,10 @@
 """Pallas TPU kernels for the compute hot-spots (paper device code + perf).
 
 Each kernel package ships <name>.py (pl.pallas_call + BlockSpec), ops.py
-(jit wrapper with XLA fallback) and ref.py (pure-jnp oracle).
+(jit wrapper with XLA fallback) and ref.py (pure-jnp oracle):
+
+* flash_attention   — training/prefill attention (causal/window/GQA)
+* decode_attention  — fused serving decode: ring KV-cache write +
+                      split-S single-query attention in one pallas_call
+* rmsnorm, xorshift_prng — normalization and the paper's PRNG example
 """

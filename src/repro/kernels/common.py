@@ -1,0 +1,12 @@
+"""Shared TPU-kernel constants and jax-version shims."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128          # TPU vector lane width (last-dim tile)
+
+# renamed across jax versions (TPUCompilerParams → CompilerParams)
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+__all__ = ["NEG_INF", "LANES", "CompilerParams"]

@@ -1,0 +1,158 @@
+"""Fused decode attention forward — Pallas TPU kernel.
+
+One ``pallas_call`` performs, per decode step:
+
+* the ring-buffer KV-cache write: the step's K/V row lands in slot
+  ``widx = pos mod S`` (the cache outputs alias the cache inputs, so on
+  TPU this is an in-place update; the slot's block is rewritten by the
+  grid cell that owns it),
+* single-query attention of the ``group = Hq/Hkv`` query heads of each KV
+  head over the *updated* cache, masked by the absolute positions stored
+  alongside the cache (``pos_cache`` — slot validity is data, not layout).
+
+Grid: ``(B, Hkv, S/block_kv)`` — all three dimensions parallel
+(flash-decode split-S).  Each cell emits a partial ``(acc, m, l)`` online
+softmax triple for its KV span; ``ops.py`` merges the splits with the
+standard cross-block combine.  This is the shape that keeps a 32k-entry
+cache attention on all cores instead of one sequential kv loop.
+
+The scalar-prefetch argument carries ``[widx, pos]`` so index maps and the
+in-block row select are known before the body runs.
+
+VMEM budget at defaults (block_kv=256, d=128, bf16 cache / f32 math):
+k/v 2·256·128·2 + q/acc 2·group·128·4 + partials ≈ 0.2 MiB — far below
+the flash-attention kernel's footprint, so block_kv can grow with S.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import LANES, NEG_INF, CompilerParams as _CompilerParams
+
+
+def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, pos_ref,
+                   ok_ref, ov_ref, o_ref, m_ref, l_ref, *,
+                   scale: float, window: Optional[int], block_kv: int):
+    si = pl.program_id(2)
+    widx = idx_ref[0]
+    q_pos = idx_ref[1]
+    blk_start = si * block_kv
+
+    k = k_ref[0, 0]                                   # (block_kv, d)
+    v = v_ref[0, 0]
+    # fused cache write: overwrite the ring slot if it falls in this block
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_kv, 1), 0) + blk_start
+    sel = row == widx                                  # (block_kv, 1)
+    k = jnp.where(sel, kn_ref[0, 0].astype(k.dtype), k)
+    v = jnp.where(sel, vn_ref[0, 0].astype(v.dtype), v)
+    ok_ref[0, 0] = k
+    ov_ref[0, 0] = v
+
+    # attention over the updated block, masked by stored absolute position
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (group, d)
+    s = jax.lax.dot_general(
+        q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (group, block_kv)
+    kpos = pos_ref[...]                                # (1, block_kv)
+    mask = (kpos >= 0) & (kpos <= q_pos)
+    if window is not None:
+        mask &= kpos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=1, keepdims=True)              # (group, 1)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    acc = jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (group, d)
+    o_ref[0, :, 0, :] = acc
+    m_ref[0, :, 0, :] = jnp.broadcast_to(m, (m.shape[0], LANES))
+    l_ref[0, :, 0, :] = jnp.broadcast_to(l, (l.shape[0], LANES))
+
+
+def decode_attention_pallas(
+        q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+        pos_cache: jax.Array, k_new: jax.Array, v_new: jax.Array,
+        widx: jax.Array, pos: jax.Array, *,
+        window: Optional[int] = None, scale: Optional[float] = None,
+        block_kv: int = 256, interpret: bool = False
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused decode step.
+
+    q: (B, Hq, 1, D); k_cache/v_cache: (B, Hkv, S, D); pos_cache: (B, S)
+    int32 *already updated* with ``pos`` at slot ``widx``; k_new/v_new:
+    (B, Hkv, 1, D); widx/pos: int32 scalars.
+
+    Returns ``(out (B, Hq, 1, D), new_k_cache, new_v_cache)`` where the new
+    caches alias the inputs (in-place ring write on TPU).
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    assert T == 1, "decode kernel is single-query"
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    block_kv = min(block_kv, S)
+    while S % block_kv:
+        block_kv -= 1
+    nsplit = S // block_kv
+    grid = (B, Hkv, nsplit)
+
+    idx = jnp.stack([widx.astype(jnp.int32), pos.astype(jnp.int32)])
+
+    q_spec = pl.BlockSpec((1, group, 1, D), lambda b, h, s, i: (b, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_kv, D),
+                           lambda b, h, s, i: (b, h, s, 0))
+    new_spec = pl.BlockSpec((1, 1, 1, D), lambda b, h, s, i: (b, h, 0, 0))
+    pos_spec = pl.BlockSpec((1, block_kv), lambda b, h, s, i: (b, s))
+    o_spec = pl.BlockSpec((1, group, 1, D), lambda b, h, s, i: (b, h, s, 0))
+    ml_spec = pl.BlockSpec((1, group, 1, LANES),
+                           lambda b, h, s, i: (b, h, s, 0))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               block_kv=block_kv)
+
+    ok, ov, o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec, new_spec, new_spec,
+                      pos_spec],
+            out_specs=[kv_spec, kv_spec, o_spec, ml_spec, ml_spec],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+            jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+            jax.ShapeDtypeStruct((B, Hq, nsplit, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, nsplit, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, nsplit, LANES), jnp.float32),
+        ],
+        # flattened arg indices include the scalar-prefetch array (0):
+        # q=1, k_cache=2, v_cache=3 → outputs new_k=0, new_v=1
+        input_output_aliases={2: 0, 3: 1},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(idx, q, k_cache, v_cache, k_new, v_new, pos_cache)
+
+    # cross-block combine (flash-decode second stage, cheap in XLA):
+    # out = Σ_s exp(m_s - M) acc_s / Σ_s exp(m_s - M) l_s
+    m = m_part[..., 0]                                 # (B, Hq, nsplit)
+    l = l_part[..., 0]
+    m_glob = jnp.max(m, axis=-1, keepdims=True)
+    alpha = jnp.exp(m - m_glob)
+    denom = jnp.maximum(jnp.sum(l * alpha, axis=-1), 1e-30)  # (B, Hq)
+    out = jnp.sum(o_part * alpha[..., None], axis=2) / denom[..., None]
+    return out[:, :, None, :].astype(q.dtype), ok, ov
+
+
+__all__ = ["decode_attention_pallas"]

@@ -1,0 +1,58 @@
+"""Public op: fused decode attention + ring-cache write, with XLA fallback.
+
+``impl="pallas"`` runs the flash-decode split-S kernel (interpret-mode on
+CPU); ``impl="xla"`` runs the jnp reference — identical semantics, used by
+dry-runs and as the correctness oracle.  Both return the updated cache
+tensors so the caller's KVCache pytree is rebuilt functionally; under jit
+on TPU the pallas path updates the cache in place (input/output aliasing).
+
+The position array is updated *before* the kernel call (a (B, S) int32
+dynamic-update-slice — negligible next to the cache traffic) so masking
+inside the kernel sees the new token as valid and the evicted slot's old
+position is gone.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_ref
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "impl", "block_kv"))
+def decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None,
+                     impl: str = "pallas",
+                     block_kv: int = 256
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused decode step; see ``ref.decode_attention_ref`` for shapes.
+
+    Returns ``(out, new_k_cache, new_v_cache, new_pos_cache)``.
+    """
+    if impl == "xla":
+        return decode_attention_ref(q, k_cache, v_cache, pos_cache,
+                                    k_new, v_new, pos, window=window,
+                                    scale=scale)
+    S = k_cache.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    widx = jnp.mod(pos, S)
+    B = pos_cache.shape[0]
+    new_pos = jax.lax.dynamic_update_slice(
+        pos_cache, jnp.full((B, 1), pos, pos_cache.dtype), (0, widx))
+    out, ok, ov = decode_attention_pallas(
+        q, k_cache, v_cache, new_pos, k_new, v_new, widx, pos,
+        window=window, scale=scale, block_kv=block_kv,
+        interpret=_INTERPRET)
+    return out, ok, ov, new_pos
+
+
+__all__ = ["decode_attention"]

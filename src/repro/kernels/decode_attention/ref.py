@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for fused decode attention over a ring KV cache.
+
+Materializes the full (B, H, S) score matrix — exactly what the fused
+kernel avoids — and mirrors its semantics: write K/V and the absolute
+position at slot ``pos mod S``, then attend the single query over every
+slot whose stored position is valid (``0 ≤ kpos ≤ pos`` and inside the
+sliding window when one is set).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+        q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+        pos_cache: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
+        pos: jnp.ndarray, window: Optional[int] = None,
+        scale: Optional[float] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """q: (B, Hq, 1, D); caches: (B, Hkv, S, D); pos_cache: (B, S) i32;
+    k_new/v_new: (B, Hkv, 1, D); pos: scalar i32 absolute position.
+
+    Returns (out, new_k_cache, new_v_cache, new_pos_cache).
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    pos = jnp.asarray(pos, jnp.int32)
+    widx = jnp.mod(pos, S)
+
+    ck = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, 0, widx, 0))
+    cv = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, 0, widx, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        pos_cache, jnp.full((B, 1), pos, pos_cache.dtype), (0, widx))
+
+    qh = q.astype(jnp.float32).reshape(B, Hkv, group, T, D)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qh,
+                        ck.astype(jnp.float32)) * scale
+    mask = (cpos >= 0) & (cpos <= pos)
+    if window is not None:
+        mask &= cpos > pos - window
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, cv.astype(jnp.float32))
+    return (out.reshape(B, Hq, T, D).astype(q.dtype), ck, cv, cpos)
+
+
+__all__ = ["decode_attention_ref"]

@@ -92,7 +92,8 @@ def batch_specs(cfg: M.ModelConfig, ctx: ShardCtx, global_batch: int,
 
 def _kv_logical():
     return KVCache(k=("layers", "batch", "kv_heads", "seq", "state"),
-                   v=("layers", "batch", "kv_heads", "seq", "state"))
+                   v=("layers", "batch", "kv_heads", "seq", "state"),
+                   pos=("layers", "batch", "seq"))
 
 
 def cache_specs(cfg: M.ModelConfig, ctx: ShardCtx, batch: int, seq_len: int
@@ -128,7 +129,9 @@ def cache_specs(cfg: M.ModelConfig, ctx: ShardCtx, batch: int, seq_len: int
                 shape = (count, batch, cfg.n_kv_heads, S_len, cfg.head_dim)
                 la = _kv_logical()
                 c = KVCache(k=_sds(ctx, shape, jnp.bfloat16, la.k),
-                            v=_sds(ctx, shape, jnp.bfloat16, la.v))
+                            v=_sds(ctx, shape, jnp.bfloat16, la.v),
+                            pos=_sds(ctx, (count, batch, S_len), jnp.int32,
+                                     la.pos))
             else:
                 c = None
             pos.append(c)

@@ -1,9 +1,21 @@
 """Attention layers: GQA/MQA with RoPE, qk-norm, sliding-window, chunked-local
-and cross-attention; KV-cache (append + rolling-buffer) for decode.
+and cross-attention; ring-buffer KV-cache for decode.
 
-Training attention can run through the Pallas flash kernel
+Training/prefill attention can run through the Pallas flash kernel
 (cfg.attn_impl="pallas") or the jnp path ("xla", default for dry-runs).
-Decode always uses the jnp path (single-query flash is pointless).
+Decode runs through the fused Pallas decode kernel (cache write + split-S
+single-query attention in one ``pallas_call``) when
+``cfg.attn_impl="pallas"``, with ``_xla_attention`` as the reference
+fallback.
+
+Ring-buffer cache (DESIGN.md "Serving path"): ``KVCache`` carries the
+absolute position of every slot alongside k/v.  Slot ``j`` of a cache of
+length ``S`` holds position ``p ≡ j (mod S)`` (``pos[j] = -1`` while
+unwritten); decode writes at ``pos mod S`` for *all* cache kinds and
+masking is purely by stored position, so full, sliding-window and
+partially-filled caches share one code path and no roll/realign copies
+are ever needed.  A ``pos=None`` cache falls back to the legacy
+arithmetic-position scheme (kept for direct KVCache(k, v) constructions).
 """
 
 from __future__ import annotations
@@ -14,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import shard_activation
+from ..kernels.decode_attention.ops import decode_attention
 from ..kernels.flash_attention.ops import flash_attention
 from . import layers as L
 from .layers import ParamTpl
@@ -39,9 +52,11 @@ def attn_tpl(d: int, n_heads: int, n_kv: int, head_dim: int, dtype: str,
 
 
 class KVCache(NamedTuple):
-    k: jax.Array        # (B, Hkv, S, Dh)
+    k: jax.Array                     # (B, Hkv, S, Dh)
     v: jax.Array
-    # rolling=True → writes wrap modulo S (sliding-window decode)
+    # absolute position stored in each ring slot, -1 = never written
+    # (B, S) int32; None → legacy arithmetic positions (see module doc)
+    pos: Optional[jax.Array] = None
 
 
 def _split_heads(x, n, dh):
@@ -103,27 +118,47 @@ def self_attention(p, x, cfg, kind: str, positions,
         else:
             out = _xla_attention(q, k, v, causal=True, window=window,
                                  q_pos=positions, k_pos=positions)
-        # prefill mode: the post-RoPE K and V *are* the decode cache
+        # prefill mode: the post-RoPE K and V *are* the decode cache;
+        # slot j of the collected cache holds absolute position j
         cdt = jnp.dtype(cfg.dtype)
-        new_cache = KVCache(k.astype(cdt), v.astype(cdt)) \
-            if cfg.collect_kv else None
+        new_cache = None
+        if cfg.collect_kv:
+            cache_pos = jnp.broadcast_to(
+                positions.astype(jnp.int32)[None, :], (B, T))
+            new_cache = KVCache(k.astype(cdt), v.astype(cdt), cache_pos)
     else:
-        # decode: write k/v at position, attend over cache
+        # decode: write k/v into the ring slot, attend over the cache
         S = cache.k.shape[2]
         pos = positions if positions.ndim == 0 else positions.reshape(-1)[0]
-        widx = jnp.mod(pos, S) if rolling else pos
-        ck = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, 0, widx, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, 0, widx, 0))
-        new_cache = KVCache(ck, cv)
-        if rolling:
-            k_pos = pos - jnp.mod(pos - jnp.arange(S), S)
+        if cache.pos is not None and cfg.attn_impl == "pallas" and T == 1:
+            # fused path: cache write + split-S attention in one kernel
+            out, ck, cv, cpos = decode_attention(
+                q, cache.k, cache.v, cache.pos, k.astype(cache.k.dtype),
+                v.astype(cache.v.dtype), pos, window=window)
+            new_cache = KVCache(ck, cv, cpos)
         else:
-            k_pos = jnp.arange(S)
-        q_pos = jnp.full((T,), pos)
-        out = _xla_attention(q, ck, cv, causal=True, window=window,
-                             q_pos=q_pos, k_pos=k_pos)
+            widx = jnp.mod(pos, S) if (rolling or cache.pos is not None) \
+                else pos
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, widx, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, widx, 0))
+            if cache.pos is not None:
+                cpos = jax.lax.dynamic_update_slice(
+                    cache.pos, jnp.full((B, 1), pos, cache.pos.dtype),
+                    (0, widx))
+                new_cache = KVCache(ck, cv, cpos)
+                k_pos = cpos
+            else:
+                # legacy layout: positions derived from slot arithmetic
+                new_cache = KVCache(ck, cv)
+                if rolling:
+                    k_pos = pos - jnp.mod(pos - jnp.arange(S), S)
+                else:
+                    k_pos = jnp.arange(S)
+            q_pos = jnp.full((T,), pos)
+            out = _xla_attention(q, ck, cv, causal=True, window=window,
+                                 q_pos=q_pos, k_pos=k_pos)
     out = _merge_heads(out.astype(x.dtype))
     return out @ p["wo"], new_cache
 

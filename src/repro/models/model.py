@@ -416,11 +416,14 @@ def cache_init(cfg: ModelConfig, batch: int, seq_len: int,
                     k=jnp.zeros((batch, cfg.n_kv_heads, S_len, cfg.head_dim),
                                 dt),
                     v=jnp.zeros((batch, cfg.n_kv_heads, S_len, cfg.head_dim),
-                                dt))
+                                dt),
+                    pos=jnp.full((batch, S_len), -1, jnp.int32))
             else:  # cross-only layers keep no per-step cache
                 c = None
+            # broadcast (not zero-fill) over the layer dim so non-zero
+            # initial state (ring positions = -1) survives the stacking
             pos_caches.append(jax.tree.map(
-                lambda a: jnp.zeros((count,) + a.shape, a.dtype), c))
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape), c))
         groups.append(tuple(pos_caches))
     cache: Dict[str, Any] = {"groups": groups}
     return cache

@@ -1,26 +1,42 @@
 """Serve-step factories: prefill (context → cache + first logits) and
 decode (one token against a standing cache).
 
-Rolling-buffer alignment: sliding-window layers collected a full-sequence
-K/V during prefill; ``align_prefill_cache`` slices the last ``window``
-positions and rolls them so slot j holds absolute position ≡ j (mod W),
-which is the invariant the decode path maintains.
+Ring-buffer alignment: sliding-window layers collected a full-sequence K/V
+during prefill (slot j = absolute position j); ``align_prefill_cache``
+gathers the last ``W`` positions directly into ring order — slot j holds
+absolute position ≡ j (mod W), the invariant every subsequent decode write
+(``widx = pos mod W``) maintains.  The gather indices are static, so this
+is one copy (the old scheme paid a slice *and* a ``jnp.roll``), and the
+absolute positions travel in ``KVCache.pos`` so the decode kernel masks
+validity by data rather than layout.
+
+The step factories are cached on the (hashable, frozen) config — repeated
+``make_prefill_step``/``make_decode_step`` calls return the *same* jitted
+callable, so servers that rebuild steps per request never retrace.
+``DECODE_EVENT``/``PREFILL_EVENT`` are the canonical event names for
+dispatch-queue submissions, letting the profiler aggregate decode traffic
+separately from prefill.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..dist.sharding import ShardCtx, use_ctx
 from ..models import model as M
 from ..models.attention import KVCache
 
+PREFILL_EVENT = "PREFILL_KERNEL"
+DECODE_EVENT = "DECODE_KERNEL"
 
-def make_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
+
+def _build_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
     pcfg = dataclasses.replace(cfg, collect_kv=True)
 
     def prefill_step(params, tokens, ctx_embed=None):
@@ -30,25 +46,51 @@ def make_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
             logits = M.logits_fn(pcfg, params, hidden[:, -1:])
         return logits, cache
 
-    return prefill_step
+    return jax.jit(prefill_step)
 
 
-def make_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
+def _build_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
     def decode_step(params, cache, token, pos):
         with use_ctx(ctx):
             return M.decode_step(cfg, params, cache, token, pos)
 
-    return decode_step
+    return jax.jit(decode_step)
+
+
+_cached_prefill = functools.cache(_build_prefill_step)
+_cached_decode = functools.cache(_build_decode_step)
+
+
+def make_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
+    """Jitted prefill step; cached on cfg so rebuilds never retrace."""
+    if ctx is None:
+        return _cached_prefill(cfg)
+    return _build_prefill_step(cfg, ctx)
+
+
+def make_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
+    """Jitted decode step; cached on cfg so rebuilds never retrace."""
+    if ctx is None:
+        return _cached_decode(cfg)
+    return _build_decode_step(cfg, ctx)
+
+
+def _ring_gather_idx(seq_len: int, W: int) -> np.ndarray:
+    """Static source indices: slot j ← the newest prefill position p < L
+    with p ≡ j (mod W); all gathered p lie in [L - W, L)."""
+    base = seq_len - W
+    return np.array([base + ((j - base) % W) for j in range(W)])
 
 
 def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
                         target_len: Optional[int] = None) -> Dict:
-    """Convert prefill-collected caches to decode layout.
+    """Convert prefill-collected caches to decode (ring) layout.
 
-    * sliding-window layers: slice the last ``window`` positions and roll
-      so slot j holds absolute position ≡ j (mod W);
-    * full-attention layers: pad with zero slots up to ``target_len`` (the
-      decode budget) — unwritten slots are masked by the position test.
+    * sliding-window layers: one static gather puts the last ``W``
+      positions into ring order (slot j ≡ position j mod W) — no
+      ``jnp.roll``;
+    * full-attention layers: pad with unwritten slots (``pos = -1``) up to
+      ``target_len`` (the decode budget) — masked by the position test.
     """
     out = {k: v for k, v in cache.items() if k != "groups"}
     groups = []
@@ -60,22 +102,27 @@ def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
                 kind = "full" if mixer == "self_cross" else mixer
                 W = cfg.cache_len(kind, seq_len)
                 S = c.k.shape[-2]
-                if W < S:  # rolling buffer
-                    k = c.k[..., -W:, :]
-                    v = c.v[..., -W:, :]
-                    shift = seq_len % W
-                    k = jnp.roll(k, shift, axis=-2)
-                    v = jnp.roll(v, shift, axis=-2)
-                    c = KVCache(k, v)
+                if W < S:  # ring buffer narrower than the prefill
+                    src = _ring_gather_idx(seq_len, W)
+                    c = KVCache(jnp.take(c.k, src, axis=-2),
+                                jnp.take(c.v, src, axis=-2),
+                                None if c.pos is None
+                                else jnp.take(c.pos, src, axis=-1))
                 elif kind in ("full", "global_nope") and target_len and \
                         target_len > S:
                     pad = [(0, 0)] * c.k.ndim
                     pad[-2] = (0, target_len - S)
-                    c = KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad))
+                    ppad = [(0, 0)] * (c.k.ndim - 2)
+                    ppad[-1] = (0, target_len - S)
+                    c = KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad),
+                                None if c.pos is None
+                                else jnp.pad(c.pos, ppad,
+                                             constant_values=-1))
             pos_caches.append(c)
         groups.append(tuple(pos_caches))
     out["groups"] = groups
     return out
 
 
-__all__ = ["make_prefill_step", "make_decode_step", "align_prefill_cache"]
+__all__ = ["make_prefill_step", "make_decode_step", "align_prefill_cache",
+           "PREFILL_EVENT", "DECODE_EVENT"]

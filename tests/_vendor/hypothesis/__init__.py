@@ -1,0 +1,48 @@
+"""Minimal, deterministic stand-in for `hypothesis`.
+
+The test environment is dependency-frozen and does not ship hypothesis;
+``tests/conftest.py`` puts this package on ``sys.path`` ONLY when the real
+library is missing.  It implements the small slice of the API the suite
+uses — ``given``/``settings`` and the strategies in ``strategies.py`` —
+with a seeded PRNG, so property tests degrade to a reproducible random
+sweep (no shrinking, no failure database).
+"""
+
+from __future__ import annotations
+
+import random
+
+from . import strategies
+
+
+def settings(max_examples: int = 50, deadline=None, **_ignored):
+    def deco(fn):
+        fn._hyp_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        conf = getattr(fn, "_hyp_settings", {"max_examples": 50})
+
+        def wrapper(*args, **kwargs):
+            for i in range(conf["max_examples"]):
+                rng = random.Random((hash(fn.__qualname__) ^ i) & 0xFFFFFFFF)
+                drawn = [s.example(rng) for s in strats]
+                kdrawn = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **kwargs, **kdrawn)
+
+        # metadata only — no functools.wraps/__wrapped__: pytest must see
+        # the (*args, **kwargs) signature, not the drawn parameters, or it
+        # would go looking for fixtures named after them
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hyp_settings = conf
+        return wrapper
+    return deco
+
+
+__all__ = ["given", "settings", "strategies"]

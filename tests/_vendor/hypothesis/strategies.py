@@ -1,0 +1,53 @@
+"""Strategies for the vendored hypothesis shim (see ``__init__.py``)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, Sequence
+
+
+class Strategy:
+    def __init__(self, draw_fn: Callable[[Any], Any]):
+        self._draw = draw_fn
+
+    def example(self, rng) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(seq: Sequence) -> Strategy:
+    items = list(seq)
+    return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def lists(elements: Strategy, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng) -> List:
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def composite(fn: Callable) -> Callable[..., Strategy]:
+    @functools.wraps(fn)
+    def build(*args, **kwargs) -> Strategy:
+        def draw_fn(rng):
+            return fn(lambda s: s.example(rng), *args, **kwargs)
+        return Strategy(draw_fn)
+    return build
+
+
+__all__ = ["Strategy", "integers", "sampled_from", "lists", "booleans",
+           "floats", "composite"]

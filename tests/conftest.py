@@ -1,8 +1,19 @@
+import pathlib
+import sys
+
 import jax
 import pytest
 
 # Smoke tests and benches must see the real (1-device) CPU backend —
 # the 512-device XLA flag is set ONLY inside launch/dryrun (per spec).
+
+# The frozen test environment has no `hypothesis`; fall back to the vendored
+# deterministic shim (tests/_vendor) so property tests still run as a
+# seeded random sweep.  The real library wins whenever it is installed.
+try:  # pragma: no cover - environment probe
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).parent / "_vendor"))
 
 
 @pytest.fixture(scope="session")

@@ -9,10 +9,15 @@ SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 
 def run_cli(mod, *args):
+    import os
     return subprocess.run(
         [sys.executable, "-m", mod, *args],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        # hermetic env, but keep jax pinned to the CPU backend: with an
+        # unset JAX_PLATFORMS a libtpu-bearing image probes the TPU
+        # metadata service and hangs for minutes before falling back
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd=pathlib.Path(__file__).resolve().parents[1])
 
 
