@@ -10,6 +10,8 @@ pretty-printed reports to stderr).
   E6 roofline      — per-(arch × shape) roofline terms from the dry-run
   E7 decode_throughput — tokens/s vs cache length, XLA vs fused Pallas
                      decode path (→ BENCH_decode.json perf trajectory)
+  E8 serve_throughput — continuous batching vs lockstep under a Poisson
+                     arrival trace (→ BENCH_serve.json)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [names...]
 """
@@ -230,6 +232,119 @@ def bench_decode_throughput():
     print(f"# wrote {out_path}", file=sys.stderr)
 
 
+# ----------------------------------------------------------------- E8 ------
+
+def bench_serve_throughput():
+    """Continuous batching vs static (batch-synchronous) batching under a
+    Poisson arrival trace.
+
+    Both paths serve the same seeded trace with the same greedy decoding
+    and the same per-sequence-position decode step; what differs is the
+    *scheduling policy*: the static baseline admits a full batch at once
+    and decodes until its slowest member finishes (finished slots keep
+    burning decode work, late batches wait for stragglers), while the
+    engine admits into any freed slot every tick.  Idle waiting is free
+    in both simulations (arrivals are tick-indexed), so the gap measured
+    here — wasted decode-slot work — is the conservative lower bound of
+    the continuous-batching win.  Results land in BENCH_serve.json.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models.model import ModelConfig, init_params
+    from repro.serve.engine import BatchedCacheManager, Request, ServeEngine
+    from repro.serve.step import (align_prefill_cache, make_decode_step,
+                                  make_prefill_step)
+
+    cfg = ModelConfig(name="bench-serve", family="dense", num_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=256, dtype="float32")
+    n_slots, budget = 4, 48
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    rng = np.random.default_rng(42)
+    arrivals = np.cumsum(rng.poisson(1.5, size=16))
+    reqs = [Request(i, [int(t) for t in rng.integers(0, cfg.vocab,
+                                                     rng.integers(4, 13))],
+                    int(rng.integers(4, 17)), arrival=int(a))
+            for i, a in enumerate(arrivals)]
+
+    def run_continuous():
+        eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget)
+        streams = eng.run(reqs)
+        return streams, eng.stats["decode_steps"]
+
+    def run_static():
+        prefill = make_prefill_step(cfg)
+        decode = make_decode_step(cfg)
+        streams, steps = {}, 0
+        for base in range(0, len(reqs), n_slots):
+            group = reqs[base: base + n_slots]
+            mgr = BatchedCacheManager(cfg, n_slots, budget)
+            toks = np.zeros((n_slots, 1), np.int32)
+            pos = np.full((n_slots,), -1, np.int32)
+            for slot, r in enumerate(group):
+                logits, cache = prefill(params,
+                                        jnp.asarray(r.prompt,
+                                                    jnp.int32)[None, :])
+                cache = align_prefill_cache(cfg, cache, len(r.prompt),
+                                            target_len=budget)
+                mgr.insert(cache, slot)
+                streams[r.rid] = [int(np.argmax(np.asarray(logits[0, -1])))]
+                toks[slot, 0] = streams[r.rid][0]
+                pos[slot] = len(r.prompt)
+            # lockstep: the whole batch decodes until its slowest member
+            # is done; finished members keep occupying their slots
+            for _ in range(max(r.max_new_tokens for r in group) - 1):
+                logits, cache = decode(params, mgr.cache,
+                                       jnp.asarray(toks), jnp.asarray(pos))
+                mgr.update(cache)
+                steps += 1
+                nxt = np.argmax(np.asarray(logits[:, 0]), -1)
+                for slot, r in enumerate(group):
+                    if len(streams[r.rid]) < r.max_new_tokens:
+                        streams[r.rid].append(int(nxt[slot]))
+                    toks[slot, 0] = int(nxt[slot])
+                    pos[slot] += 1
+        return streams, steps
+
+    results = {"backend": jax.default_backend(),
+               "trace": {"n_requests": len(reqs), "n_slots": n_slots,
+                         "budget": budget, "poisson_mean_gap": 1.5},
+               "rows": []}
+    for name, fn in [("lockstep", run_static),
+                     ("continuous", run_continuous)]:
+        fn()                                   # warmup (jit compile)
+        t0 = time.perf_counter()
+        streams, steps = fn()
+        dt = time.perf_counter() - t0
+        toks = sum(len(s) for s in streams.values())
+        decoded = toks - len(reqs)             # first token is prefill's
+        util = decoded / max(1, steps * n_slots)
+        results["rows"].append(
+            {"policy": name, "tokens": toks, "decode_steps": steps,
+             "tok_s": toks / dt, "slot_utilization": util, "wall_s": dt})
+        results[f"streams_{name}"] = {str(k): v
+                                      for k, v in sorted(streams.items())}
+        print(f"# serve {name}: {toks} tokens in {dt:.3f}s "
+              f"({toks / dt:,.1f} tok/s), {steps} decode steps, "
+              f"slot util {util:.2f}", file=sys.stderr)
+        _emit(f"serve_throughput_{name}", dt * 1e6,
+              f"tok_s={toks / dt:.1f};util={util:.2f}")
+    results["streams_match"] = (results.pop("streams_lockstep") ==
+                                results.pop("streams_continuous"))
+    cont, lock = results["rows"][1], results["rows"][0]
+    results["fewer_steps_continuous"] = \
+        cont["decode_steps"] <= lock["decode_steps"]
+    print(f"# streams_match={results['streams_match']} "
+          f"steps: lockstep={lock['decode_steps']} "
+          f"continuous={cont['decode_steps']}", file=sys.stderr)
+    out_path = ROOT / "BENCH_serve.json"
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+
+
 BENCHES = {
     "loc_compare": bench_loc_compare,
     "overhead": bench_overhead,
@@ -238,6 +353,7 @@ BENCHES = {
     "prng_quality": bench_prng_quality,
     "roofline": bench_roofline,
     "decode_throughput": bench_decode_throughput,
+    "serve_throughput": bench_serve_throughput,
 }
 
 

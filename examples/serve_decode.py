@@ -1,7 +1,15 @@
-"""Serving driver: batched prefill → decode with a standing KV cache,
-dispatched on profiled queues (prefill and decode get separate lanes, so
-the profiler shows their interleaving — the paper's two-queue pattern
-applied to inference).
+"""Lockstep-batch serving reference driver: one batched prefill → decode
+with a standing KV cache, every sequence at the same depth, dispatched on
+profiled queues (prefill and decode get separate lanes, so the profiler
+shows their interleaving — the paper's two-queue pattern applied to
+inference).
+
+This is the *reference* path: simplest possible batching, scalar decode
+position, useful as the oracle the continuous-batching engine is tested
+against.  For mixed-depth traffic — requests that arrive, progress, and
+finish independently — use ``serve_engine.py``, which admits requests
+into free slots of the standing cache and decodes all of them per tick
+at per-sequence ring positions.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --tokens 24
 """
@@ -28,7 +36,8 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
-                    help="decode path: jnp reference or fused Pallas kernel")
+                    help="decode path: jnp reference or fused Pallas kernel"
+                         " (mixed-depth traffic: see serve_engine.py)")
     args = ap.parse_args()
 
     import dataclasses

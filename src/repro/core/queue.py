@@ -27,12 +27,27 @@ from .wrapper import Wrapper
 
 
 def _is_ready(out) -> bool:
-    """Non-blocking: True iff every array leaf finished (or was donated)."""
-    try:
-        return all(x.is_ready() for x in jax.tree.leaves(out)
-                   if hasattr(x, "is_ready"))
-    except Exception:  # noqa: BLE001 — deleted/donated ⇒ finished
-        return True
+    """Non-blocking: True iff every array leaf finished (or was donated).
+
+    Per-leaf classification: a deleted/donated buffer counts as finished
+    *for that leaf only* — its siblings may still be in flight and must
+    keep the submission pending.  A leaf whose ``is_ready()`` raises
+    anything else (an errored async computation) also keeps the
+    submission pending, so ``finish()`` surfaces the failure instead of
+    this prune silently dropping it."""
+    for x in jax.tree.leaves(out):
+        if not hasattr(x, "is_ready"):
+            continue
+        try:
+            if not x.is_ready():
+                return False
+        except RuntimeError as e:
+            msg = str(e).lower()
+            if "delet" not in msg and "donat" not in msg:
+                return False               # failure: keep for finish()
+        except Exception:  # noqa: BLE001 — unknown failure: keep pending
+            return False
+    return True
 
 
 class DispatchQueue(Wrapper):
@@ -52,6 +67,14 @@ class DispatchQueue(Wrapper):
         # ordering guarantee, so blocking on the last output alone proves
         # nothing about earlier submissions)
         self._pending_outputs: List[Any] = []
+
+    def _track_output_locked(self, out) -> None:
+        """Append a submission's outputs, dropping ones that already
+        completed so the queue never pins more than the in-flight window
+        of buffers (caller holds the lock)."""
+        self._pending_outputs = [
+            o for o in self._pending_outputs if not _is_ready(o)]
+        self._pending_outputs.append(out)
 
     # -- submission -------------------------------------------------------
     def enqueue(self, fn: Callable[..., Any], *args,
@@ -78,11 +101,7 @@ class DispatchQueue(Wrapper):
                 if evt:
                     evt.attach_outputs(out)
                     self._events.append(evt)
-                # drop outputs that already completed so the queue never
-                # pins more than the in-flight window of device buffers
-                self._pending_outputs = [
-                    o for o in self._pending_outputs if not _is_ready(o)]
-                self._pending_outputs.append(out)
+                self._track_output_locked(out)
             return out
         return None
 
@@ -108,7 +127,7 @@ class DispatchQueue(Wrapper):
                 if evt:
                     evt.attach_outputs(arr)
                     self._events.append(evt)
-                self._pending_outputs.append(arr)
+                self._track_output_locked(arr)
             return fut if fut is not None else arr
         return None
 
@@ -125,7 +144,7 @@ class DispatchQueue(Wrapper):
                 if evt:
                     evt.attach_outputs(buffer.array)
                     self._events.append(evt)
-                self._pending_outputs.append(buffer.array)
+                self._track_output_locked(buffer.array)
             return buffer
         return None
 

@@ -16,8 +16,12 @@ softmax triple for its KV span; ``ops.py`` merges the splits with the
 standard cross-block combine.  This is the shape that keeps a 32k-entry
 cache attention on all cores instead of one sequential kv loop.
 
-The scalar-prefetch argument carries ``[widx, pos]`` so index maps and the
-in-block row select are known before the body runs.
+The scalar-prefetch argument carries the per-sequence ``(2, B)`` plane
+``[widx[b], pos[b]]`` so index maps and the in-block row select are known
+before the body runs; each grid cell reads the row of the batch it owns.
+Per-sequence positions are what continuous batching needs: every sequence
+in the batch may sit at a different decode depth (``pos[b] = -1`` marks an
+inactive slot — all keys masked, output garbage by construction).
 
 VMEM budget at defaults (block_kv=256, d=128, bf16 cache / f32 math):
 k/v 2·256·128·2 + q/acc 2·group·128·4 + partials ≈ 0.2 MiB — far below
@@ -40,9 +44,10 @@ from ..common import LANES, NEG_INF, CompilerParams as _CompilerParams
 def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, pos_ref,
                    ok_ref, ov_ref, o_ref, m_ref, l_ref, *,
                    scale: float, window: Optional[int], block_kv: int):
+    bi = pl.program_id(0)
     si = pl.program_id(2)
-    widx = idx_ref[0]
-    q_pos = idx_ref[1]
+    widx = idx_ref[0, bi]
+    q_pos = idx_ref[1, bi]
     blk_start = si * block_kv
 
     k = k_ref[0, 0]                                   # (block_kv, d)
@@ -87,8 +92,9 @@ def decode_attention_pallas(
     """Fused decode step.
 
     q: (B, Hq, 1, D); k_cache/v_cache: (B, Hkv, S, D); pos_cache: (B, S)
-    int32 *already updated* with ``pos`` at slot ``widx``; k_new/v_new:
-    (B, Hkv, 1, D); widx/pos: int32 scalars.
+    int32 *already updated* with ``pos[b]`` at slot ``widx[b]``;
+    k_new/v_new: (B, Hkv, 1, D); widx/pos: (B,) int32 per-sequence ring
+    indices and absolute positions.
 
     Returns ``(out (B, Hq, 1, D), new_k_cache, new_v_cache)`` where the new
     caches alias the inputs (in-place ring write on TPU).
@@ -106,7 +112,9 @@ def decode_attention_pallas(
     nsplit = S // block_kv
     grid = (B, Hkv, nsplit)
 
-    idx = jnp.stack([widx.astype(jnp.int32), pos.astype(jnp.int32)])
+    widx = jnp.broadcast_to(jnp.asarray(widx, jnp.int32), (B,))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    idx = jnp.stack([widx, pos])                       # (2, B)
 
     q_spec = pl.BlockSpec((1, group, 1, D), lambda b, h, s, i: (b, h, 0, 0))
     kv_spec = pl.BlockSpec((1, 1, block_kv, D),

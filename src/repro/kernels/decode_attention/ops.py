@@ -6,10 +6,12 @@ dry-runs and as the correctness oracle.  Both return the updated cache
 tensors so the caller's KVCache pytree is rebuilt functionally; under jit
 on TPU the pallas path updates the cache in place (input/output aliasing).
 
-The position array is updated *before* the kernel call (a (B, S) int32
-dynamic-update-slice — negligible next to the cache traffic) so masking
-inside the kernel sees the new token as valid and the evicted slot's old
-position is gone.
+The position array is updated *before* the kernel call (a per-row scatter
+into the (B, S) int32 plane — negligible next to the cache traffic) so
+masking inside the kernel sees the new token as valid and the evicted
+slot's old position is gone.  ``pos`` may be a scalar (lockstep batch) or
+a ``(B,)`` vector (continuous batching: every sequence at its own decode
+depth; the ring write index is per-sequence, ``widx[b] = pos[b] mod S``).
 """
 
 from __future__ import annotations
@@ -36,18 +38,22 @@ def decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One fused decode step; see ``ref.decode_attention_ref`` for shapes.
 
-    Returns ``(out, new_k_cache, new_v_cache, new_pos_cache)``.
+    ``pos`` may be a scalar (lockstep batch) or ``(B,)`` (per-sequence
+    decode depths, the continuous-batching case).  Returns
+    ``(out, new_k_cache, new_v_cache, new_pos_cache)``.
     """
     if impl == "xla":
         return decode_attention_ref(q, k_cache, v_cache, pos_cache,
                                     k_new, v_new, pos, window=window,
                                     scale=scale)
     S = k_cache.shape[2]
-    pos = jnp.asarray(pos, jnp.int32)
-    widx = jnp.mod(pos, S)
     B = pos_cache.shape[0]
-    new_pos = jax.lax.dynamic_update_slice(
-        pos_cache, jnp.full((B, 1), pos, pos_cache.dtype), (0, widx))
+    pos = jnp.asarray(pos, jnp.int32)
+    # scalar pos = lockstep batch; (B,) pos = per-sequence decode depths
+    pos = jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (B,))
+    widx = jnp.mod(pos, S)
+    new_pos = pos_cache.at[jnp.arange(B), widx].set(
+        pos.astype(pos_cache.dtype))
     out, ok, ov = decode_attention_pallas(
         q, k_cache, v_cache, new_pos, k_new, v_new, widx, pos,
         window=window, scale=scale, block_kv=block_kv,

@@ -2,9 +2,15 @@
 
 Materializes the full (B, H, S) score matrix — exactly what the fused
 kernel avoids — and mirrors its semantics: write K/V and the absolute
-position at slot ``pos mod S``, then attend the single query over every
-slot whose stored position is valid (``0 ≤ kpos ≤ pos`` and inside the
+position at slot ``pos[b] mod S``, then attend the single query over every
+slot whose stored position is valid (``0 ≤ kpos ≤ pos[b]`` and inside the
 sliding window when one is set).
+
+``pos`` may be a scalar (lockstep batch: every sequence at the same decode
+depth) or a ``(B,)`` vector (continuous batching: each sequence at its own
+depth; ``pos[b] = -1`` marks an inactive slot — its write lands at slot
+``S-1`` with stored position ``-1``, i.e. invalid, and its output is
+garbage by construction since every key is masked).
 """
 
 from __future__ import annotations
@@ -22,7 +28,8 @@ def decode_attention_ref(
         scale: Optional[float] = None
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """q: (B, Hq, 1, D); caches: (B, Hkv, S, D); pos_cache: (B, S) i32;
-    k_new/v_new: (B, Hkv, 1, D); pos: scalar i32 absolute position.
+    k_new/v_new: (B, Hkv, 1, D); pos: scalar or (B,) i32 absolute
+    position(s).
 
     Returns (out, new_k_cache, new_v_cache, new_pos_cache).
     """
@@ -33,21 +40,22 @@ def decode_attention_ref(
     if scale is None:
         scale = D ** -0.5
     pos = jnp.asarray(pos, jnp.int32)
-    widx = jnp.mod(pos, S)
+    pos_b = jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (B,))
+    widx = jnp.mod(pos_b, S)                              # (B,)
+    bidx = jnp.arange(B)
 
-    ck = jax.lax.dynamic_update_slice(
-        k_cache, k_new.astype(k_cache.dtype), (0, 0, widx, 0))
-    cv = jax.lax.dynamic_update_slice(
-        v_cache, v_new.astype(v_cache.dtype), (0, 0, widx, 0))
-    cpos = jax.lax.dynamic_update_slice(
-        pos_cache, jnp.full((B, 1), pos, pos_cache.dtype), (0, widx))
+    ck = k_cache.at[bidx, :, widx, :].set(
+        k_new[:, :, 0, :].astype(k_cache.dtype))
+    cv = v_cache.at[bidx, :, widx, :].set(
+        v_new[:, :, 0, :].astype(v_cache.dtype))
+    cpos = pos_cache.at[bidx, widx].set(pos_b.astype(pos_cache.dtype))
 
     qh = q.astype(jnp.float32).reshape(B, Hkv, group, T, D)
     logits = jnp.einsum("bhgtd,bhsd->bhgts", qh,
                         ck.astype(jnp.float32)) * scale
-    mask = (cpos >= 0) & (cpos <= pos)
+    mask = (cpos >= 0) & (cpos <= pos_b[:, None])
     if window is not None:
-        mask &= cpos > pos - window
+        mask &= cpos > pos_b[:, None] - window
     logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgts,bhsd->bhgtd", probs, cv.astype(jnp.float32))

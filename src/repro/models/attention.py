@@ -16,6 +16,13 @@ masking is purely by stored position, so full, sliding-window and
 partially-filled caches share one code path and no roll/realign copies
 are ever needed.  A ``pos=None`` cache falls back to the legacy
 arithmetic-position scheme (kept for direct KVCache(k, v) constructions).
+
+Per-sequence decode (continuous batching): when ``positions`` arrives as a
+``(B, T)`` plane every batch row may sit at a different absolute depth —
+ring writes become per-batch scatters (``widx[b] = pos[b] mod S``) and the
+fused kernel receives the ``(B,)`` position vector.  ``pos[b] = -1`` marks
+an inactive serve slot: all of its keys mask out and its output is garbage
+by construction (the serve engine repacks the slot's cache on admission).
 """
 
 from __future__ import annotations
@@ -126,6 +133,23 @@ def self_attention(p, x, cfg, kind: str, positions,
             cache_pos = jnp.broadcast_to(
                 positions.astype(jnp.int32)[None, :], (B, T))
             new_cache = KVCache(k.astype(cdt), v.astype(cdt), cache_pos)
+    elif positions.ndim == 2:
+        # decode, per-sequence positions (B, T): every sequence sits at its
+        # own depth (continuous batching).  Ring writes are per-batch
+        # scatters at widx[b] = pos[b] mod S; requires position-carrying
+        # caches (the legacy arithmetic scheme cannot express mixed depths).
+        assert T == 1, "per-sequence decode is single-token"
+        assert cache.pos is not None, \
+            "per-sequence decode needs a position-carrying cache"
+        pos_b = positions[:, 0].astype(jnp.int32)          # (B,)
+        # one op serves both impls: the fused kernel or its jnp oracle —
+        # per-row ring-write + position-masking semantics live in exactly
+        # one place (kernels/decode_attention)
+        out, ck, cv, cpos = decode_attention(
+            q, cache.k, cache.v, cache.pos, k.astype(cache.k.dtype),
+            v.astype(cache.v.dtype), pos_b, window=window,
+            impl=cfg.attn_impl)
+        new_cache = KVCache(ck, cv, cpos)
     else:
         # decode: write k/v into the ring slot, attend over the cache
         S = cache.k.shape[2]

@@ -319,12 +319,20 @@ def forward(cfg: ModelConfig, params, tokens, *,
     """Returns (hidden (B,T,D), new_cache, aux_loss).
 
     Training/prefill: cache=None, positions = arange(T).
-    Decode: cache given, tokens (B,1), pos0 scalar absolute position.
+    Decode: cache given, tokens (B,1), pos0 the absolute position — a
+    scalar (lockstep batch: every sequence at the same depth) or a (B,)
+    vector (continuous batching: per-sequence depths; -1 = inactive slot).
     """
     B, T = tokens.shape
     x = L.embed(params["embed"], tokens, cfg.embed_scale)
-    positions = jnp.arange(T) if pos0 is None else \
-        jnp.broadcast_to(jnp.asarray(pos0), (T,))
+    if pos0 is None:
+        positions = jnp.arange(T)
+    else:
+        pos0 = jnp.asarray(pos0)
+        if pos0.ndim == 0:
+            positions = jnp.broadcast_to(pos0, (T,))
+        else:       # per-sequence decode depths → (B, T) position plane
+            positions = pos0[:, None] + jnp.arange(T)[None, :]
 
     ctx = None
     if cfg.has_cross:
@@ -432,7 +440,8 @@ def cache_init(cfg: ModelConfig, batch: int, seq_len: int,
 def decode_step(cfg: ModelConfig, params, cache: Dict, token: jax.Array,
                 pos: jax.Array, ctx_embed: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict]:
-    """One-token decode: token (B,1) int32, pos scalar int32."""
+    """One-token decode: token (B,1) int32; pos scalar int32 (lockstep) or
+    (B,) int32 per-sequence absolute positions (-1 = inactive slot)."""
     hidden, new_cache, _ = forward(cfg, params, token, ctx_embed=ctx_embed,
                                    cache=cache, pos0=pos)
     return logits_fn(cfg, params, hidden), new_cache

@@ -1,0 +1,17 @@
+"""Continuous-batching serve engine (see ``engine.py`` for the design).
+
+Public surface::
+
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine(cfg, params, n_slots=4, budget=128)
+    streams = eng.run([Request(0, prompt, max_new_tokens=16), ...])
+"""
+
+from .cache_manager import BatchedCacheManager
+from .engine import INSERT_EVENT, ServeEngine
+from .request import Request, Sequence, Status
+from .scheduler import SlotScheduler
+
+__all__ = ["ServeEngine", "Request", "Sequence", "Status",
+           "SlotScheduler", "BatchedCacheManager", "INSERT_EVENT"]

@@ -1,0 +1,58 @@
+"""Standing batched KV-cache manager for the serve engine.
+
+Owns one decode cache of ``n_slots`` batch slots allocated at the decode
+budget (``model.cache_init(cfg, n_slots, budget)``) and keeps it resident
+across the engine's whole lifetime — requests come and go, the cache
+arrays never reallocate.  Admission packs a new request's prefilled
+(batch=1, budget-aligned) cache into its slot with one jitted
+``dynamic_update_slice`` per leaf (``serve.step.cache_slot_insert``);
+because the slot index is a traced scalar, inserting into slot 0 and slot
+7 share a single compiled program.
+
+Invariant: every slot independently satisfies the ring invariant — slot
+``j`` of sequence ``b``'s ring of width ``W`` holds absolute position
+``p ≡ j (mod W)`` — because ``align_prefill_cache`` establishes it at the
+standing budget and per-sequence decode writes (``widx[b] = pos[b] mod
+W``) maintain it per batch row.  Retirement needs no cache work at all:
+a stale slot is garbage-masked (its next admission overwrites every slot
+of the ring and the pos plane wholesale).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ...models import model as M
+from ..step import cache_slot_extract, cache_slot_insert
+
+# one compiled insert/extract shared by every manager instance (jit
+# caches on pytree structure + slot is traced, so all slots, all
+# managers of the same config reuse a single program)
+insert_jit = jax.jit(cache_slot_insert)
+extract_jit = jax.jit(cache_slot_extract)
+
+
+class BatchedCacheManager:
+    def __init__(self, cfg: M.ModelConfig, n_slots: int, budget: int):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.budget = budget
+        self.cache: Dict[str, Any] = M.cache_init(cfg, n_slots, budget)
+
+    def insert(self, one_cache: Dict[str, Any], slot: int) -> None:
+        """Pack a batch=1 budget-aligned cache into ``slot`` in place."""
+        self.cache = insert_jit(self.cache, one_cache, jnp.int32(slot))
+
+    def extract(self, slot: int) -> Dict[str, Any]:
+        """Batch=1 view of ``slot`` (debugging / migration)."""
+        return extract_jit(self.cache, jnp.int32(slot))
+
+    def update(self, cache: Dict[str, Any]) -> None:
+        """Adopt the cache pytree returned by a batched decode step."""
+        self.cache = cache
+
+
+__all__ = ["BatchedCacheManager"]

@@ -1,0 +1,207 @@
+"""Continuous-batching serve engine.
+
+One :class:`ServeEngine` owns a standing batched KV cache of ``n_slots``
+decode slots and runs a tick loop over it:
+
+1. **admit** — queued requests are bound to free slots (FIFO); each
+   admission prefills its prompt at batch=1, aligns the collected cache
+   to the standing decode budget, and packs it into its slot of the
+   batched cache (``cache_slot_insert``).  The first output token falls
+   out of the prefill logits.
+2. **decode** — one fused decode step advances *all* active slots
+   together, each at its own depth: the engine hands
+   ``model.decode_step`` the per-sequence ``(B,)`` position vector
+   (``-1`` for idle slots, which are garbage-masked by construction).
+3. **stream / retire** — each active slot's next token is streamed to
+   its request; sequences that hit their budget or EOS release their
+   slot, which the next tick's admission reuses.
+
+Requests arrive, progress, and finish independently — sequences of
+different prompt lengths and depths share every decode step, which is
+what lockstep batching (``examples/serve_decode.py``) cannot do.
+
+Device work is dispatched on two profiled ``DispatchQueue`` lanes
+("Admit" carries ``PREFILL_KERNEL`` + ``ALIGN_CACHE`` + ``SLOT_INSERT``
+submissions, "Decode" carries ``DECODE_KERNEL``), so ``prof.Prof`` shows
+admission/prefill/decode interleaving with zero extra instrumentation —
+the cf4ocl profiling model applied to serving.
+
+Simplifications (documented, not accidental): greedy sampling unless a
+``sample_fn`` is supplied; one prefill per admission (no prompt
+batching/bucketing — distinct prompt lengths retrace the prefill jit);
+the per-tick host sync to read sampled tokens is the streaming boundary.
+Cross-attention (encoder/vision) models are not served — their context
+caches are per-request and would need slot packing of ``ctx_enc`` too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence as Seq
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import Context, DispatchQueue
+from ...models import model as M
+from ..step import (ALIGN_EVENT, DECODE_EVENT, PREFILL_EVENT,
+                    make_align_step, make_decode_step, make_prefill_step)
+from .cache_manager import BatchedCacheManager, insert_jit
+from .request import Request, Sequence, Status
+from .scheduler import SlotScheduler
+
+INSERT_EVENT = "SLOT_INSERT"
+
+
+class ServeEngine:
+    def __init__(self, cfg: M.ModelConfig, params, *, n_slots: int = 4,
+                 budget: int = 128, context: Optional[Context] = None,
+                 prefill_impl: Optional[str] = None,
+                 sample_fn: Optional[Callable[[np.ndarray], np.ndarray]]
+                 = None):
+        """``budget`` is the decode position budget: prompt length + new
+        tokens of any request must fit in it.  ``prefill_impl`` overrides
+        ``cfg.attn_impl`` for prefill only (e.g. decode on the fused
+        Pallas kernel while prefill stays on XLA)."""
+        assert not cfg.has_cross, \
+            "serve engine does not support cross-attention models"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.budget = budget
+        pcfg = cfg if prefill_impl is None else \
+            dataclasses.replace(cfg, attn_impl=prefill_impl)
+        self._prefill = make_prefill_step(pcfg)
+        self._decode = make_decode_step(cfg)
+        # greedy by default; sample_fn maps (B, V) logits → (B,) tokens
+        self._sample = sample_fn or (lambda lg: np.argmax(lg, axis=-1))
+
+        self.scheduler = SlotScheduler(n_slots)
+        self.cache_mgr = BatchedCacheManager(cfg, n_slots, budget)
+        ctx = context or Context.new_accel()
+        self.q_admit = DispatchQueue(ctx, "Admit")
+        self.q_decode = DispatchQueue(ctx, "Decode")
+
+        # host-side per-slot decode inputs (tick-batched to device)
+        self._tokens = np.zeros((n_slots, 1), np.int32)
+        self._pos = np.full((n_slots,), -1, np.int32)
+        self._slot_seq: Dict[int, Sequence] = {}
+        self.sequences: List[Sequence] = []
+        self.tick = 0       # == ticks elapsed; steps/tokens in stats
+        self.stats = {"decode_steps": 0, "decoded_tokens": 0,
+                      "prefills": 0}
+
+    # -- client side -----------------------------------------------------
+    def submit(self, request: Request) -> Sequence:
+        """Queue a request; tokens appear in ``sequence.out_tokens``."""
+        assert len(request.prompt) + request.max_new_tokens <= self.budget, \
+            f"request {request.rid} exceeds the decode budget {self.budget}"
+        seq = self.scheduler.submit(request)
+        self.sequences.append(seq)
+        return seq
+
+    @property
+    def done(self) -> bool:
+        return all(s.status is Status.FINISHED for s in self.sequences)
+
+    # -- lifecycle -------------------------------------------------------
+    def _retire(self, seq: Sequence) -> None:
+        seq.status = Status.FINISHED
+        seq.finished_at = self.tick
+        self._pos[seq.slot] = -1
+        del self._slot_seq[seq.slot]
+        self.scheduler.release(seq.slot)
+
+    def _admit(self) -> List[Sequence]:
+        admitted = []
+        for seq, slot in self.scheduler.admit():
+            prompt = jnp.asarray(seq.request.prompt, jnp.int32)[None, :]
+            logits, cache = self.q_admit.enqueue(
+                self._prefill, self.params, prompt,
+                name=PREFILL_EVENT, command_type=PREFILL_EVENT)
+            # relayout and slot packing are enqueued as *pure* jitted fns
+            # whose outputs are the events' outputs — finish() fences
+            # them and the spans track the copies, not host dispatch
+            align = make_align_step(self.cfg, seq.prompt_len,
+                                    target_len=self.budget)
+            cache = self.q_admit.enqueue(align, cache, name=ALIGN_EVENT,
+                                         command_type=ALIGN_EVENT)
+            packed = self.q_admit.enqueue(
+                insert_jit, self.cache_mgr.cache, cache, jnp.int32(slot),
+                name=INSERT_EVENT, command_type=INSERT_EVENT)
+            self.cache_mgr.update(packed)
+            self.stats["prefills"] += 1
+            seq.status = Status.ACTIVE
+            seq.admitted_at = self.tick
+            seq.pos = seq.prompt_len
+            self._slot_seq[slot] = seq
+            # first output token comes from the prefill logits
+            t0 = int(self._sample(np.asarray(logits[:, -1]))[0])
+            if seq.emit(t0):
+                self._retire(seq)
+            else:
+                self._tokens[slot, 0] = t0
+                self._pos[slot] = seq.pos
+            admitted.append(seq)
+        return admitted
+
+    def _decode_tick(self) -> List[Sequence]:
+        active = sorted(self._slot_seq)
+        if not active:
+            return []
+        logits, cache = self.q_decode.enqueue(
+            self._decode, self.params, self.cache_mgr.cache,
+            jnp.asarray(self._tokens), jnp.asarray(self._pos),
+            name=DECODE_EVENT, command_type=DECODE_EVENT)
+        self.cache_mgr.update(cache)
+        self.stats["decode_steps"] += 1
+        nxt = self._sample(np.asarray(logits[:, 0]))      # (n_slots,)
+        finished = []
+        for slot in active:
+            seq = self._slot_seq[slot]
+            tok = int(nxt[slot])
+            seq.pos += 1
+            self.stats["decoded_tokens"] += 1
+            if seq.emit(tok):
+                self._retire(seq)
+                finished.append(seq)
+            else:
+                self._tokens[slot, 0] = tok
+                self._pos[slot] = seq.pos
+        return finished
+
+    def step(self) -> List[Sequence]:
+        """One engine tick: admit, then one batched decode step.
+
+        Returns the sequences that finished this tick."""
+        finished = [s for s in self._admit()
+                    if s.status is Status.FINISHED]
+        finished += self._decode_tick()
+        self.tick += 1
+        return finished
+
+    def run(self, requests: Seq[Request], max_ticks: int = 100_000
+            ) -> Dict[int, List[int]]:
+        """Serve a whole trace: each request is submitted at its
+        ``arrival`` tick; runs until every request finished.  Returns
+        ``{rid: generated tokens}``."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        i = 0
+        while i < len(pending) or not self.done:
+            if self.tick > max_ticks:
+                raise RuntimeError(
+                    f"serve trace did not converge in {max_ticks} ticks")
+            while i < len(pending) and pending[i].arrival <= self.tick:
+                self.submit(pending[i])
+                i += 1
+            self.step()
+        self.finish()
+        return {s.rid: list(s.out_tokens) for s in self.sequences}
+
+    def finish(self) -> None:
+        """Fence both dispatch lanes (``clFinish`` on each)."""
+        self.q_admit.finish()
+        self.q_decode.finish()
+
+
+__all__ = ["ServeEngine", "INSERT_EVENT"]

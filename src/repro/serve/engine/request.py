@@ -1,0 +1,77 @@
+"""Request/Sequence lifecycle for the continuous-batching serve engine.
+
+A :class:`Request` is what a client submits: a prompt, a generation
+budget, and (in simulations) the tick at which it arrives.  A
+:class:`Sequence` is the engine's mutable view of one request as it moves
+through the lifecycle::
+
+    QUEUED ──admit──▶ ACTIVE ──max_new / eos──▶ FINISHED
+              │                        │
+           (slot bound,             (slot released,
+            prompt prefilled         reusable by the
+            into the slot)           next admission)
+
+``Sequence.pos`` is the absolute position of the *next* token fed to
+decode: after prefilling a prompt of length ``L`` (positions ``0..L-1``)
+the first output token comes from the prefill logits and is consumed by
+decode at position ``L``; each decode tick advances ``pos`` by one.  The
+per-slot collection of these values is exactly the ``(B,)`` position
+vector ``model.decode_step`` now accepts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Sequence as Seq
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"        # submitted, waiting for a free slot
+    ACTIVE = "active"        # bound to a slot, decoding
+    FINISHED = "finished"    # budget exhausted or EOS; slot released
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request (immutable client-side view)."""
+    rid: int
+    prompt: Seq[int]
+    max_new_tokens: int
+    arrival: int = 0                  # tick at which the request appears
+    eos_id: Optional[int] = None      # stop token (None = budget only)
+
+    def __post_init__(self):
+        assert len(self.prompt) > 0, "empty prompt"
+        assert self.max_new_tokens > 0, "need a positive token budget"
+
+
+@dataclasses.dataclass
+class Sequence:
+    """Engine-side mutable state of one request."""
+    request: Request
+    status: Status = Status.QUEUED
+    slot: int = -1                    # batch slot while ACTIVE, else -1
+    pos: int = -1                     # next decode position (= prompt_len
+                                      # + emitted - 1 while active)
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    admitted_at: int = -1             # tick stamps for latency accounting
+    finished_at: int = -1
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    def emit(self, token: int) -> bool:
+        """Record one generated token; True iff the sequence is done."""
+        self.out_tokens.append(token)
+        done = (len(self.out_tokens) >= self.request.max_new_tokens or
+                token == self.request.eos_id)
+        return done
+
+
+__all__ = ["Request", "Sequence", "Status"]

@@ -1,0 +1,68 @@
+"""Slot scheduler: admits queued requests into free batch slots.
+
+The standing batched KV cache has a fixed number of slots (the decode
+batch width).  The scheduler owns the slot ⇄ request binding:
+
+* **submit** appends to a FIFO wait queue (arrival order is service
+  order — no reordering, so per-request latency is predictable);
+* **admit** pops waiting requests into free slots, lowest slot index
+  first (deterministic packing — replays and tests see identical slot
+  assignments);
+* **release** returns a finished sequence's slot to the free pool, where
+  the next admission reuses it (the whole point of continuous batching:
+  a retired slot turns into fresh work without draining the batch).
+
+The scheduler is deliberately host-side and tiny: admission policy is a
+pure data-structure decision, all device work (prefill, cache packing,
+decode) happens in the engine on dispatch-queue lanes.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Deque, List, Tuple
+
+from .request import Request, Sequence
+
+
+class SlotScheduler:
+    def __init__(self, n_slots: int):
+        assert n_slots > 0
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots))
+        heapq.heapify(self._free)
+        self._waiting: Deque[Sequence] = deque()
+
+    # -- queue side ------------------------------------------------------
+    def submit(self, request: Request) -> Sequence:
+        seq = Sequence(request)
+        self._waiting.append(seq)
+        return seq
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    # -- slot side -------------------------------------------------------
+    def admit(self) -> List[Tuple[Sequence, int]]:
+        """Bind waiting sequences to free slots (FIFO × lowest-slot)."""
+        admitted: List[Tuple[Sequence, int]] = []
+        while self._waiting and self._free:
+            slot = heapq.heappop(self._free)
+            seq = self._waiting.popleft()
+            seq.slot = slot
+            admitted.append((seq, slot))
+        return admitted
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots
+        assert slot not in self._free, f"slot {slot} double-released"
+        heapq.heappush(self._free, slot)
+
+
+__all__ = ["SlotScheduler"]

@@ -1,14 +1,20 @@
 """Serve-step factories: prefill (context → cache + first logits) and
 decode (one token against a standing cache).
 
-Ring-buffer alignment: sliding-window layers collected a full-sequence K/V
-during prefill (slot j = absolute position j); ``align_prefill_cache``
-gathers the last ``W`` positions directly into ring order — slot j holds
-absolute position ≡ j (mod W), the invariant every subsequent decode write
-(``widx = pos mod W``) maintains.  The gather indices are static, so this
-is one copy (the old scheme paid a slice *and* a ``jnp.roll``), and the
-absolute positions travel in ``KVCache.pos`` so the decode kernel masks
-validity by data rather than layout.
+Ring-buffer alignment: prefill collects full-sequence K/V (slot j =
+absolute position j); ``align_prefill_cache`` re-lays it out as the
+standing decode ring sized by the decode *budget* — slot j holds absolute
+position ≡ j (mod W) where ``W = cfg.cache_len(kind, budget)``, the
+invariant every subsequent decode write (``widx = pos mod W``) maintains.
+The gather/pad indices are static, so this is one copy (the old scheme
+paid a slice *and* a ``jnp.roll``), and the absolute positions travel in
+``KVCache.pos`` so the decode kernel masks validity by data rather than
+layout.  Because the layout depends only on the budget (not the prompt
+length), prefills of any length are slot-compatible with
+``model.cache_init(cfg, B, budget)`` — ``cache_slot_insert`` /
+``cache_slot_extract`` move batch=1 caches in and out of a standing
+batched cache, which is what the continuous-batching engine
+(``serve/engine``) builds on.
 
 The step factories are cached on the (hashable, frozen) config — repeated
 ``make_prefill_step``/``make_decode_step`` calls return the *same* jitted
@@ -34,6 +40,7 @@ from ..models.attention import KVCache
 
 PREFILL_EVENT = "PREFILL_KERNEL"
 DECODE_EVENT = "DECODE_KERNEL"
+ALIGN_EVENT = "ALIGN_CACHE"
 
 
 def _build_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
@@ -75,6 +82,22 @@ def make_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
     return _build_decode_step(cfg, ctx)
 
 
+def _build_align_step(cfg: M.ModelConfig, seq_len: int,
+                      target_len: Optional[int]):
+    return jax.jit(
+        lambda cache: align_prefill_cache(cfg, cache, seq_len, target_len))
+
+
+_cached_align = functools.cache(_build_align_step)
+
+
+def make_align_step(cfg: M.ModelConfig, seq_len: int,
+                    target_len: Optional[int] = None):
+    """Jitted prefill→decode cache relayout (one fused program instead of
+    eager per-layer gathers/pads); cached on (cfg, lengths)."""
+    return _cached_align(cfg, seq_len, target_len)
+
+
 def _ring_gather_idx(seq_len: int, W: int) -> np.ndarray:
     """Static source indices: slot j ← the newest prefill position p < L
     with p ≡ j (mod W); all gathered p lie in [L - W, L)."""
@@ -84,14 +107,27 @@ def _ring_gather_idx(seq_len: int, W: int) -> np.ndarray:
 
 def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
                         target_len: Optional[int] = None) -> Dict:
-    """Convert prefill-collected caches to decode (ring) layout.
+    """Convert prefill-collected caches (slot j = absolute position j,
+    length ``seq_len``) to the standing decode (ring) layout sized by the
+    decode budget ``target_len`` (default: ``seq_len``).
 
-    * sliding-window layers: one static gather puts the last ``W``
-      positions into ring order (slot j ≡ position j mod W) — no
-      ``jnp.roll``;
-    * full-attention layers: pad with unwritten slots (``pos = -1``) up to
-      ``target_len`` (the decode budget) — masked by the position test.
+    Every cache kind lands in a ring of width
+    ``W = cfg.cache_len(kind, budget)`` — the *same* width
+    ``model.cache_init(cfg, B, budget)`` allocates, so prefills of any
+    prompt length produce slot-compatible caches for a given budget
+    (what lets the serve engine pack per-request prefills into a standing
+    batched cache via :func:`cache_slot_insert`):
+
+    * ``W < seq_len``: one static gather puts the last ``W`` positions
+      into ring order (slot j ≡ position j mod W) — no ``jnp.roll``;
+    * ``W > seq_len``: pad with unwritten slots (``pos = -1``, masked by
+      the position test); existing slots already satisfy the invariant
+      (position j sits in slot j = j mod W).
     """
+    budget = target_len or seq_len
+    assert budget >= seq_len, \
+        f"decode budget {budget} smaller than the prefill ({seq_len}): " \
+        "full-attention positions would be silently dropped"
     out = {k: v for k, v in cache.items() if k != "groups"}
     groups = []
     for gi, (pattern, count) in enumerate(cfg.groups):
@@ -100,7 +136,7 @@ def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
             c = cache["groups"][gi][pi]
             if isinstance(c, KVCache):
                 kind = "full" if mixer == "self_cross" else mixer
-                W = cfg.cache_len(kind, seq_len)
+                W = cfg.cache_len(kind, budget)
                 S = c.k.shape[-2]
                 if W < S:  # ring buffer narrower than the prefill
                     src = _ring_gather_idx(seq_len, W)
@@ -108,12 +144,11 @@ def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
                                 jnp.take(c.v, src, axis=-2),
                                 None if c.pos is None
                                 else jnp.take(c.pos, src, axis=-1))
-                elif kind in ("full", "global_nope") and target_len and \
-                        target_len > S:
+                elif W > S:  # budget beyond the prefill: unwritten slots
                     pad = [(0, 0)] * c.k.ndim
-                    pad[-2] = (0, target_len - S)
+                    pad[-2] = (0, W - S)
                     ppad = [(0, 0)] * (c.k.ndim - 2)
-                    ppad[-1] = (0, target_len - S)
+                    ppad[-1] = (0, W - S)
                     c = KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad),
                                 None if c.pos is None
                                 else jnp.pad(c.pos, ppad,
@@ -124,5 +159,49 @@ def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
     return out
 
 
-__all__ = ["make_prefill_step", "make_decode_step", "align_prefill_cache",
-           "PREFILL_EVENT", "DECODE_EVENT"]
+def _slot_index(leaf_ndim: int, slot, axis: int):
+    idx = [0] * leaf_ndim
+    idx[axis] = slot
+    return tuple(idx)
+
+
+def cache_slot_insert(batched: Dict, one: Dict, slot) -> Dict:
+    """Write a batch=1 cache into batch slot ``slot`` of a standing
+    batched cache (functional; jit-able with ``slot`` traced).
+
+    ``one`` must be laid out at the same decode budget as the standing
+    cache (prefill → :func:`align_prefill_cache` with the standing
+    ``target_len``), so every leaf matches except the batch axis — axis 1
+    for group leaves (leading layer-stack dim), axis 0 for top-level
+    entries such as ``ctx_enc``.
+    """
+    out = {}
+    for key, dst in batched.items():
+        axis = 1 if key == "groups" else 0
+        out[key] = jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice(
+                d, s.astype(d.dtype), _slot_index(d.ndim, slot, axis)),
+            dst, one[key])
+    return out
+
+
+def cache_slot_extract(batched: Dict, slot) -> Dict:
+    """Read batch slot ``slot`` of a standing batched cache back out as a
+    batch=1 cache (inverse of :func:`cache_slot_insert`)."""
+    out = {}
+    for key, src in batched.items():
+        axis = 1 if key == "groups" else 0
+
+        def _take(a, axis=axis):
+            sizes = list(a.shape)
+            sizes[axis] = 1
+            return jax.lax.dynamic_slice(
+                a, _slot_index(a.ndim, slot, axis), sizes)
+
+        out[key] = jax.tree.map(_take, src)
+    return out
+
+
+__all__ = ["make_prefill_step", "make_decode_step", "make_align_step",
+           "align_prefill_cache", "cache_slot_insert", "cache_slot_extract",
+           "PREFILL_EVENT", "DECODE_EVENT", "ALIGN_EVENT"]

@@ -94,6 +94,42 @@ class TestContextQueueBuffer:
         assert [e.command_type for e in q.events] == \
             ["WRITE_BUFFER", "READ_BUFFER"]
 
+    def test_transfer_loops_prune_pending_outputs(self):
+        """enqueue_write/enqueue_read must prune completed submissions
+        like enqueue does — a transfer-heavy loop must not pin every
+        buffer it ever touched until the next finish()."""
+        ctx = c.Context.new_accel()
+        q = c.DispatchQueue(ctx, "IO")
+        b = c.Buffer.new(ctx, (16,), jnp.int32)
+        for i in range(32):
+            q.enqueue_write(b, np.full(16, i), name="H2D")
+            jax.block_until_ready(b.array)   # everything settled ⇒ prunable
+        assert len(q._pending_outputs) <= 1
+        q.finish()
+
+    def test_is_ready_keeps_failures_pending(self):
+        """An output whose is_ready() raises a non-deletion error must
+        stay pending (so finish() surfaces the failure); deleted/donated
+        buffers count as finished."""
+        from repro.core.queue import _is_ready
+
+        class Boom:
+            def is_ready(self):
+                raise RuntimeError("INTERNAL: async computation failed")
+
+        class Deleted:
+            def is_ready(self):
+                raise RuntimeError("Array has been deleted")
+
+        class Ready:
+            def is_ready(self):
+                return True
+
+        assert _is_ready(Ready())
+        assert _is_ready(Deleted())          # donated ⇒ prunable
+        assert not _is_ready(Boom())         # failure ⇒ keep for finish()
+        assert not _is_ready([Ready(), Boom()])
+
 
 class TestProgramKernel:
     def test_build_lower_compile_analyze(self):

@@ -101,6 +101,83 @@ def test_matches_model_xla_attention():
         np.testing.assert_allclose(np.asarray(cp_f), np.asarray(cp))
 
 
+def test_per_sequence_pos_matches_ref():
+    """(B,) position vectors (continuous batching): each batch row writes
+    its own ring slot and masks at its own depth; pos = -1 marks an
+    inactive slot (all keys masked, cache write lands as invalid)."""
+    B, Hq, Hkv, S, D = 4, 4, 2, 32, 16
+    q, kc, vc, kn, vn = mk(B, Hq, Hkv, S, D)
+    fills = [5, 20, 40, -1]              # mixed depths + inactive slot
+    pc = jnp.concatenate([ring_pos(1, S, max(f, 0)) for f in fills])
+    pos = jnp.asarray(fills, jnp.int32)
+    for window in [None, 16]:
+        got = decode_attention(q, kc, vc, pc, kn, vn, pos, window=window,
+                               impl="pallas", block_kv=8)
+        want = decode_attention_ref(q, kc, vc, pc, kn, vn, pos,
+                                    window=window)
+        active = np.asarray(fills) >= 0
+        for g, w, name in zip(got, want, ["out", "k", "v", "pos"]):
+            ga = np.asarray(g, np.float32)
+            wa = np.asarray(w, np.float32)
+            if name == "out":            # inactive rows are garbage by
+                ga, wa = ga[active], wa[active]   # construction
+            np.testing.assert_allclose(ga, wa, atol=1e-5, rtol=1e-5,
+                                       err_msg=f"{name} window={window}")
+
+
+def test_per_sequence_ref_matches_per_row_scalar():
+    """The vectorized reference must equal running each batch row alone
+    through the scalar-pos reference — per-sequence semantics are exactly
+    'every row is its own lockstep batch of one'."""
+    B, Hq, Hkv, S, D = 3, 4, 2, 16, 16
+    q, kc, vc, kn, vn = mk(B, Hq, Hkv, S, D)
+    fills = [3, 16, 25]
+    pc = jnp.concatenate([ring_pos(1, S, f) for f in fills])
+    out, ck, cv, cp = decode_attention_ref(
+        q, kc, vc, pc, kn, vn, jnp.asarray(fills, jnp.int32), window=8)
+    for b, f in enumerate(fills):
+        o1, k1, v1, p1 = decode_attention_ref(
+            q[b:b + 1], kc[b:b + 1], vc[b:b + 1], pc[b:b + 1],
+            kn[b:b + 1], vn[b:b + 1], jnp.int32(f), window=8)
+        for g, w, name in zip([o1, k1, v1, p1],
+                              [out[b:b + 1], ck[b:b + 1], cv[b:b + 1],
+                               cp[b:b + 1]], ["out", "k", "v", "pos"]):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       atol=1e-6, rtol=1e-6,
+                                       err_msg=f"row {b} {name}")
+
+
+def test_padded_slots_are_masked_both_impls():
+    """`align_prefill_cache`'s target_len padding contract at the kernel
+    level: slots carrying pos = -1 must not contribute to attention in
+    either impl — a cache padded with -1 slots attends identically to the
+    same keys in an unpadded cache."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 16, 16
+    q, kc, vc, kn, vn = mk(B, Hq, Hkv, S, D)
+    fill = 8
+    pc = ring_pos(B, S, fill)
+    # oracle: plain attention over exactly the valid keys (prefix + new)
+    ck_full = jnp.concatenate([kc[:, :, :fill], kn], axis=2)
+    cv_full = jnp.concatenate([vc[:, :, :fill], vn], axis=2)
+    out_ref = _xla_attention(q, ck_full, cv_full, causal=True, window=None,
+                             q_pos=jnp.full((1,), fill),
+                             k_pos=jnp.arange(fill + 1))
+    # poison the padded region: if masking ever read it, outputs move
+    kc_p = kc.at[:, :, fill + 1:].set(1e3)
+    vc_p = vc.at[:, :, fill + 1:].set(-1e3)
+    for impl in ["xla", "pallas"]:
+        out, _, _, cp = decode_attention(
+            q, kc_p, vc_p, pc, kn, vn, jnp.int32(fill), impl=impl,
+            block_kv=8)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(out_ref, np.float32),
+                                   atol=1e-5, rtol=1e-5, err_msg=impl)
+        # untouched padded slots still carry -1
+        np.testing.assert_array_equal(np.asarray(cp[:, fill + 1:]),
+                                      -np.ones((B, S - fill - 1), np.int32))
+
+
 def test_multistep_ring_wrap_consistency():
     """Decoding 3×S steps through the fused op must keep matching the
     reference step-for-step as the ring wraps repeatedly."""
