@@ -12,6 +12,15 @@ pretty-printed reports to stderr).
                      decode path (→ BENCH_decode.json perf trajectory)
   E8 serve_throughput — continuous batching vs lockstep under a Poisson
                      arrival trace (→ BENCH_serve.json)
+  E9 paged_vs_dense — paged KV pool vs dense per-slot rings: tokens/s +
+                     resident KV bytes at equal traffic (→ BENCH_serve.json
+                     "paged_vs_dense")
+
+The ``BENCH_*.json`` files are *snapshots* (overwritten per run); every
+perf bench additionally appends a ``{git_rev, timestamp}``-stamped row to
+``BENCH_history.jsonl``.  The history file is committed, so the
+trajectory accrues in-repo as PRs re-run the benches; CI uploads the
+refreshed copy (committed rows + that run's rows) as an artifact.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [names...]
 """
@@ -20,14 +29,51 @@ from __future__ import annotations
 
 import json
 import pathlib
+import subprocess
 import sys
 import time
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
+HISTORY = ROOT / "BENCH_history.jsonl"
 
 
 def _emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.3f},{derived}")
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:   # noqa: BLE001 — no git / not a checkout
+        return "unknown"
+
+
+def _history_append(bench: str, summary: dict) -> None:
+    """Append one stamped row to BENCH_history.jsonl (the snapshot files
+    are overwritten per run; this is the trajectory that survives)."""
+    row = {"bench": bench, "git_rev": _git_rev(),
+           "timestamp": time.time(), **summary}
+    with HISTORY.open("a") as f:
+        f.write(json.dumps(row) + "\n")
+    print(f"# appended {bench} row to {HISTORY}", file=sys.stderr)
+
+
+def _merge_snapshot(path: pathlib.Path, update: dict) -> None:
+    """Merge ``update`` into a snapshot JSON (benches that share a file —
+    E8/E9 both land in BENCH_serve.json — must not clobber each other
+    when run individually)."""
+    data = {}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data.update(update)
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 # ----------------------------------------------------------------- E1 ------
@@ -227,9 +273,10 @@ def bench_decode_throughput():
               f"tok_s={tok_p:.1f}")
     results["pallas_ge_xla"] = all(
         r["pallas_tok_s"] >= r["xla_tok_s"] for r in results["rows"])
-    out_path = ROOT / "BENCH_decode.json"
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"# wrote {out_path}", file=sys.stderr)
+    _merge_snapshot(ROOT / "BENCH_decode.json", results)
+    _history_append("decode_throughput", {
+        "backend": results["backend"], "rows": results["rows"],
+        "pallas_ge_xla": results["pallas_ge_xla"]})
 
 
 # ----------------------------------------------------------------- E8 ------
@@ -340,9 +387,116 @@ def bench_serve_throughput():
     print(f"# streams_match={results['streams_match']} "
           f"steps: lockstep={lock['decode_steps']} "
           f"continuous={cont['decode_steps']}", file=sys.stderr)
-    out_path = ROOT / "BENCH_serve.json"
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"# wrote {out_path}", file=sys.stderr)
+    _merge_snapshot(ROOT / "BENCH_serve.json", results)
+    _history_append("serve_throughput", {
+        "backend": results["backend"], "rows": results["rows"],
+        "streams_match": results["streams_match"]})
+
+
+# ----------------------------------------------------------------- E9 ------
+
+def bench_paged_vs_dense():
+    """Paged KV pool vs dense per-slot rings at equal traffic.
+
+    The same mixed-length Poisson trace is served twice by the engine —
+    once on the dense standing cache (every slot pinned at the budget),
+    once on the paged pool with the arena capped well below the dense
+    provision — with identical greedy decoding.  The paged run must
+    produce byte-identical streams (preempting and swapping if the pool
+    runs dry); what changes is *resident KV bytes*: the dense cache pins
+    ``n_slots × W`` positions for the whole run, the pool pins only its
+    arena, and actually-used pages track live sequence lengths.  Results
+    land under the ``paged_vs_dense`` key of BENCH_serve.json.
+    """
+    import jax
+    import numpy as np
+    from repro.models import model as Mmod
+    from repro.models.model import ModelConfig, init_params
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.paging import kv_resident_bytes
+
+    cfg = ModelConfig(name="bench-paged", family="dense", num_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=256, dtype="float32")
+    n_slots, budget, page_size, pool_pages = 4, 48, 4, 20
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    # mixed-length trace: short chats next to near-budget prompts — the
+    # length diversity dense allocation cannot exploit
+    rng = np.random.default_rng(11)
+    arrivals = np.cumsum(rng.poisson(1.5, size=16))
+    reqs = []
+    for i, a in enumerate(arrivals):
+        L = int(rng.integers(4, 33))
+        n = int(rng.integers(4, min(17, budget - L + 1)))
+        reqs.append(Request(i, [int(t) for t in rng.integers(0, cfg.vocab,
+                                                             L)],
+                            n, arrival=int(a)))
+
+    def serve(paged):
+        kw = dict(paged=True, page_size=page_size,
+                  pool_pages=pool_pages) if paged else {}
+        eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget,
+                          **kw)
+        # ServeEngine.run with per-tick page sampling bolted on — keep
+        # run()'s non-convergence guard so a scheduling livelock fails
+        # the bench instead of hanging CI
+        pending = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+        i, peak_pages = 0, 0
+        while i < len(pending) or not eng.done:
+            if eng.tick > 10_000:
+                raise RuntimeError("serve trace did not converge")
+            while i < len(pending) and pending[i].arrival <= eng.tick:
+                eng.submit(pending[i])
+                i += 1
+            eng.step()
+            if paged:
+                peak_pages = max(peak_pages,
+                                 sum(eng.cache_mgr.pages_held().values()))
+        eng.finish()
+        streams = {s.rid: list(s.out_tokens) for s in eng.sequences}
+        return eng, streams, peak_pages
+
+    out = {"trace": {"n_requests": len(reqs), "n_slots": n_slots,
+                     "budget": budget, "page_size": page_size,
+                     "pool_pages": pool_pages},
+           "rows": []}
+    streams_by = {}
+    for name, paged in [("dense", False), ("paged", True)]:
+        serve(paged)                           # warmup (jit compile)
+        t0 = time.perf_counter()
+        eng, streams, peak_pages = serve(paged)
+        dt = time.perf_counter() - t0
+        toks = sum(len(s) for s in streams.values())
+        resident = (eng.cache_mgr.resident_bytes() if paged
+                    else kv_resident_bytes(eng.cache_mgr.cache))
+        row = {"layout": name, "tokens": toks, "tok_s": toks / dt,
+               "decode_steps": eng.stats["decode_steps"],
+               "resident_kv_bytes": resident, "wall_s": dt,
+               "preemptions": eng.stats["preemptions"]}
+        if paged:
+            row["peak_pages_held"] = peak_pages
+        out["rows"].append(row)
+        streams_by[name] = streams
+        print(f"# {name}: {toks} tokens in {dt:.3f}s ({toks / dt:,.1f} "
+              f"tok/s), resident KV {resident:,} B"
+              + (f", peak pages {peak_pages}, "
+                 f"{eng.stats['preemptions']} preemptions" if paged
+                 else ""), file=sys.stderr)
+        _emit(f"paged_vs_dense_{name}", dt * 1e6,
+              f"tok_s={toks / dt:.1f};kv_bytes={resident}")
+    dense_row, paged_row = out["rows"]
+    out["streams_match"] = streams_by["dense"] == streams_by["paged"]
+    out["kv_bytes_ratio"] = (dense_row["resident_kv_bytes"] /
+                             paged_row["resident_kv_bytes"])
+    print(f"# streams_match={out['streams_match']} resident-KV ratio "
+          f"dense/paged = {out['kv_bytes_ratio']:.2f}x", file=sys.stderr)
+    assert out["streams_match"], "paged serving diverged from dense!"
+    _merge_snapshot(ROOT / "BENCH_serve.json", {"paged_vs_dense": out})
+    _history_append("paged_vs_dense", {
+        "rows": out["rows"], "streams_match": out["streams_match"],
+        "kv_bytes_ratio": out["kv_bytes_ratio"]})
 
 
 BENCHES = {
@@ -354,6 +508,7 @@ BENCHES = {
     "roofline": bench_roofline,
     "decode_throughput": bench_decode_throughput,
     "serve_throughput": bench_serve_throughput,
+    "paged_vs_dense": bench_paged_vs_dense,
 }
 
 

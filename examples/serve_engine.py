@@ -38,6 +38,15 @@ def main() -> int:
                     help="Poisson mean inter-arrival gap in ticks")
     ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
                     help="decode path: jnp reference or fused Pallas kernel")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool instead of dense "
+                         "per-slot rings")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="positions per KV page (paged mode)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="arena pages per cache kind (default: dense-"
+                         "equivalent full provision; smaller values "
+                         "oversubscribe and exercise preemption)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -54,7 +63,8 @@ def main() -> int:
             for i, a in enumerate(arrivals)]
 
     eng = ServeEngine(cfg, params, n_slots=args.slots, budget=args.budget,
-                      prefill_impl="xla")
+                      prefill_impl="xla", paged=args.paged,
+                      page_size=args.page_size, pool_pages=args.pool_pages)
     prof = Prof()
     prof.start()
     streams = eng.run(reqs)
@@ -71,6 +81,10 @@ def main() -> int:
           f"{st['decode_steps']} decode steps, "
           f"{st['decoded_tokens']} decoded tokens "
           f"(slot utilization {util:.2f})")
+    if args.paged:
+        print(f"paged pool: {st['preemptions']} preemptions, "
+              f"{st['swap_ins']} swap-ins, resident KV "
+              f"{eng.cache_mgr.resident_bytes():,} bytes")
 
     prof.add_queue("Admit", eng.q_admit)
     prof.add_queue("Decode", eng.q_decode)

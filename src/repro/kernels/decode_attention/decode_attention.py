@@ -82,6 +82,18 @@ def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref, pos_ref,
     l_ref[0, :, 0, :] = jnp.broadcast_to(l, (l.shape[0], LANES))
 
 
+def _combine_splits(q, o_part, m_part, l_part):
+    """Flash-decode second stage (cheap in XLA), shared by the dense and
+    paged kernels: out = Σ_s exp(m_s − M) acc_s / Σ_s exp(m_s − M) l_s."""
+    m = m_part[..., 0]                                 # (B, Hq, nsplit)
+    l = l_part[..., 0]
+    m_glob = jnp.max(m, axis=-1, keepdims=True)
+    alpha = jnp.exp(m - m_glob)
+    denom = jnp.maximum(jnp.sum(l * alpha, axis=-1), 1e-30)  # (B, Hq)
+    out = jnp.sum(o_part * alpha[..., None], axis=2) / denom[..., None]
+    return out[:, :, None, :].astype(q.dtype)
+
+
 def decode_attention_pallas(
         q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         pos_cache: jax.Array, k_new: jax.Array, v_new: jax.Array,
@@ -152,15 +164,99 @@ def decode_attention_pallas(
         interpret=interpret,
     )(idx, q, k_cache, v_cache, k_new, v_new, pos_cache)
 
-    # cross-block combine (flash-decode second stage, cheap in XLA):
-    # out = Σ_s exp(m_s - M) acc_s / Σ_s exp(m_s - M) l_s
-    m = m_part[..., 0]                                 # (B, Hq, nsplit)
-    l = l_part[..., 0]
-    m_glob = jnp.max(m, axis=-1, keepdims=True)
-    alpha = jnp.exp(m - m_glob)
-    denom = jnp.maximum(jnp.sum(l * alpha, axis=-1), 1e-30)  # (B, Hq)
-    out = jnp.sum(o_part * alpha[..., None], axis=2) / denom[..., None]
-    return out[:, :, None, :].astype(q.dtype), ok, ov
+    return _combine_splits(q, o_part, m_part, l_part), ok, ov
 
 
-__all__ = ["decode_attention_pallas"]
+def _paged_decode_kernel(idx_ref, pt_ref, *refs, scale, window, block_kv):
+    """Paged-variant body: identical math to the dense kernel — the page
+    table only steers the BlockSpec index maps, so by the time the body
+    runs, ``k_ref``/``v_ref``/``pos_ref`` already hold the physical page
+    of the logical ring page this grid cell owns."""
+    del pt_ref   # consumed by the index maps
+    _decode_kernel(*((idx_ref,) + refs), scale=scale, window=window,
+                   block_kv=block_kv)
+
+
+def decode_attention_paged_pallas(
+        q: jax.Array, k_arena: jax.Array, v_arena: jax.Array,
+        pos_arena: jax.Array, k_new: jax.Array, v_new: jax.Array,
+        page_table: jax.Array, widx: jax.Array, pos: jax.Array, *,
+        window: Optional[int] = None, scale: Optional[float] = None,
+        interpret: bool = False
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused decode step over the paged KV pool.
+
+    q: (B, Hq, 1, D); k_arena/v_arena: (n_pages, Hkv, page_size, D) pools
+    shared by every sequence; pos_arena: (n_pages, page_size) int32
+    *already updated* with ``pos[b]`` at the write slot; page_table:
+    (B, n_ptes) int32 (entry 0 = null page); widx/pos: (B,) int32 logical
+    ring indices (``pos mod W``, ``W = n_ptes·page_size``) and absolute
+    positions.
+
+    Grid: ``(B, Hkv, n_ptes)`` — one cell per *logical* ring page; the
+    scalar-prefetched page table resolves it to a physical arena page in
+    the index maps, so the body is byte-for-byte the dense split-S kernel
+    with ``block_kv = page_size``.  The arena outputs alias the inputs
+    (in-place page update on TPU).  Idle rows (all-null tables) make
+    several grid cells write the null page — racy, and harmless: the null
+    page's stored positions stay ``-1``, so nothing ever attends to it.
+
+    Returns ``(out (B, Hq, 1, D), new_k_arena, new_v_arena)``.
+    """
+    B, Hq, T, D = q.shape
+    n_pages, Hkv, ps, _ = k_arena.shape
+    n_ptes = page_table.shape[-1]
+    assert T == 1, "decode kernel is single-query"
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    grid = (B, Hkv, n_ptes)
+
+    widx = jnp.broadcast_to(jnp.asarray(widx, jnp.int32), (B,))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    idx = jnp.stack([widx, pos])                       # (2, B)
+    pt = page_table.astype(jnp.int32)
+
+    q_spec = pl.BlockSpec((1, group, 1, D),
+                          lambda b, h, t, i, p: (b, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, 1, ps, D),
+                           lambda b, h, t, i, p: (p[b, t], h, 0, 0))
+    new_spec = pl.BlockSpec((1, 1, 1, D), lambda b, h, t, i, p: (b, h, 0, 0))
+    pos_spec = pl.BlockSpec((1, ps), lambda b, h, t, i, p: (p[b, t], 0))
+    o_spec = pl.BlockSpec((1, group, 1, D),
+                          lambda b, h, t, i, p: (b, h, t, 0))
+    ml_spec = pl.BlockSpec((1, group, 1, LANES),
+                           lambda b, h, t, i, p: (b, h, t, 0))
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               window=window, block_kv=ps)
+
+    ok, ov, o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec, new_spec, new_spec,
+                      pos_spec],
+            out_specs=[kv_spec, kv_spec, o_spec, ml_spec, ml_spec],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(k_arena.shape, k_arena.dtype),
+            jax.ShapeDtypeStruct(v_arena.shape, v_arena.dtype),
+            jax.ShapeDtypeStruct((B, Hq, n_ptes, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, n_ptes, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, n_ptes, LANES), jnp.float32),
+        ],
+        # flattened arg indices include both scalar-prefetch arrays
+        # (idx=0, pt=1): q=2, k_arena=3, v_arena=4 → outputs 0, 1
+        input_output_aliases={3: 0, 4: 1},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(idx, pt, q, k_arena, v_arena, k_new, v_new, pos_arena)
+
+    return _combine_splits(q, o_part, m_part, l_part), ok, ov
+
+
+__all__ = ["decode_attention_pallas", "decode_attention_paged_pallas"]

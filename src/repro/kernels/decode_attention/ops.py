@@ -22,8 +22,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .decode_attention import decode_attention_pallas
-from .ref import decode_attention_ref
+from .decode_attention import (decode_attention_paged_pallas,
+                               decode_attention_pallas)
+from .ref import decode_attention_paged_ref, decode_attention_ref
 
 _INTERPRET = jax.default_backend() == "cpu"
 
@@ -34,14 +35,23 @@ def decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
                      window: Optional[int] = None,
                      scale: Optional[float] = None,
                      impl: str = "pallas",
-                     block_kv: int = 256
+                     block_kv: int = 256,
+                     page_table=None
                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One fused decode step; see ``ref.decode_attention_ref`` for shapes.
 
     ``pos`` may be a scalar (lockstep batch) or ``(B,)`` (per-sequence
-    decode depths, the continuous-batching case).  Returns
+    decode depths, the continuous-batching case).  With ``page_table``
+    ((B, n_ptes) int32), the caches are the paged-pool arenas
+    ((n_pages, Hkv, page_size, D) K/V, (n_pages, page_size) positions) and
+    the step's ring write/read are routed through the table — see
+    ``ref.decode_attention_paged_ref``.  Returns
     ``(out, new_k_cache, new_v_cache, new_pos_cache)``.
     """
+    if page_table is not None:
+        return _decode_attention_paged(q, k_cache, v_cache, pos_cache,
+                                       k_new, v_new, pos, page_table,
+                                       window, scale, impl)
     if impl == "xla":
         return decode_attention_ref(q, k_cache, v_cache, pos_cache,
                                     k_new, v_new, pos, window=window,
@@ -58,6 +68,28 @@ def decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
         q, k_cache, v_cache, new_pos, k_new, v_new, widx, pos,
         window=window, scale=scale, block_kv=block_kv,
         interpret=_INTERPRET)
+    return out, ok, ov, new_pos
+
+
+def _decode_attention_paged(q, k_arena, v_arena, pos_arena, k_new, v_new,
+                            pos, page_table, window, scale, impl):
+    if impl == "xla":
+        return decode_attention_paged_ref(q, k_arena, v_arena, pos_arena,
+                                          k_new, v_new, pos, page_table,
+                                          window=window, scale=scale)
+    ps = k_arena.shape[2]
+    B, n_ptes = page_table.shape
+    W = n_ptes * ps
+    pos = jnp.asarray(pos, jnp.int32)
+    pos = jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (B,))
+    widx = jnp.mod(pos, W)
+    # pre-kernel position scatter, as in the dense path — but through the
+    # table: the write slot's physical page is page_table[b, widx // ps]
+    ppage = page_table[jnp.arange(B), widx // ps]
+    new_pos = pos_arena.at[ppage, widx % ps].set(pos.astype(pos_arena.dtype))
+    out, ok, ov = decode_attention_paged_pallas(
+        q, k_arena, v_arena, new_pos, k_new, v_new, page_table, widx, pos,
+        window=window, scale=scale, interpret=_INTERPRET)
     return out, ok, ov, new_pos
 
 

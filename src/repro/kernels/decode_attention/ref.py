@@ -62,4 +62,65 @@ def decode_attention_ref(
     return (out.reshape(B, Hq, T, D).astype(q.dtype), ck, cv, cpos)
 
 
-__all__ = ["decode_attention_ref"]
+def decode_attention_paged_ref(
+        q: jnp.ndarray, k_arena: jnp.ndarray, v_arena: jnp.ndarray,
+        pos_arena: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
+        pos: jnp.ndarray, page_table: jnp.ndarray,
+        window: Optional[int] = None, scale: Optional[float] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged variant: q: (B, Hq, 1, D); arenas: (n_pages, Hkv, ps, D) K/V
+    pools shared by every sequence; pos_arena: (n_pages, ps) i32;
+    page_table: (B, n_ptes) i32 mapping logical ring page ``t`` of each
+    sequence to a physical page (0 = null page).
+
+    Semantics are *exactly* the dense reference applied to the gathered
+    per-sequence ring view ``arena[page_table[b]]`` of width
+    ``W = n_ptes·ps``: the step's K/V land at logical ring slot
+    ``widx = pos mod W`` — physical page ``page_table[b, widx // ps]``,
+    in-page slot ``widx % ps`` — and the query attends over every slot of
+    the gathered view whose stored position is valid.  An inactive row
+    (``pos[b] = -1``) must have an all-null page table; its write lands in
+    the null page with stored position ``-1`` (invalid) and its output is
+    garbage by construction.
+
+    Returns (out, new_k_arena, new_v_arena, new_pos_arena).
+    """
+    B, Hq, T, D = q.shape
+    n_pages, Hkv, ps, _ = k_arena.shape
+    n_ptes = page_table.shape[-1]
+    W = n_ptes * ps
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (B,))
+    widx = jnp.mod(pos_b, W)                              # (B,)
+    bidx = jnp.arange(B)
+    ppage = page_table[bidx, widx // ps]                  # (B,) physical
+    wo = widx % ps
+
+    ck = k_arena.at[ppage, :, wo, :].set(
+        k_new[:, :, 0, :].astype(k_arena.dtype))
+    cv = v_arena.at[ppage, :, wo, :].set(
+        v_new[:, :, 0, :].astype(v_arena.dtype))
+    cpos = pos_arena.at[ppage, wo].set(pos_b.astype(pos_arena.dtype))
+
+    # dense per-sequence ring views: (B, n_ptes, Hkv, ps, D) → (B,Hkv,W,D)
+    kd = ck[page_table].transpose(0, 2, 1, 3, 4).reshape(B, Hkv, W, D)
+    vd = cv[page_table].transpose(0, 2, 1, 3, 4).reshape(B, Hkv, W, D)
+    pd = cpos[page_table].reshape(B, W)
+
+    qh = q.astype(jnp.float32).reshape(B, Hkv, group, T, D)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qh,
+                        kd.astype(jnp.float32)) * scale
+    mask = (pd >= 0) & (pd <= pos_b[:, None])
+    if window is not None:
+        mask &= pd > pos_b[:, None] - window
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, vd.astype(jnp.float32))
+    return (out.reshape(B, Hq, T, D).astype(q.dtype), ck, cv, cpos)
+
+
+__all__ = ["decode_attention_ref", "decode_attention_paged_ref"]

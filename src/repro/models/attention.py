@@ -59,11 +59,20 @@ def attn_tpl(d: int, n_heads: int, n_kv: int, head_dim: int, dtype: str,
 
 
 class KVCache(NamedTuple):
-    k: jax.Array                     # (B, Hkv, S, Dh)
+    k: jax.Array                     # (B, Hkv, S, Dh) dense; paged: see below
     v: jax.Array
     # absolute position stored in each ring slot, -1 = never written
     # (B, S) int32; None → legacy arithmetic positions (see module doc)
     pos: Optional[jax.Array] = None
+    # paged layout (serve/paging.py): when set, k/v are page arenas
+    # (n_pages, Hkv, page_size, Dh) shared by every sequence, pos is the
+    # paged validity plane (n_pages, page_size), and page_table (B, n_ptes)
+    # int32 maps each sequence's logical ring page t to a physical page
+    # (entry 0 = reserved null page).  The ring invariant becomes
+    # page-local: slot j of logical page t holds position
+    # p ≡ (t·page_size + j) (mod W) with W = n_ptes·page_size.
+    # None → dense per-slot rings (the layout everything else uses).
+    page_table: Optional[jax.Array] = None
 
 
 def _split_heads(x, n, dh):
@@ -144,14 +153,17 @@ def self_attention(p, x, cfg, kind: str, positions,
         pos_b = positions[:, 0].astype(jnp.int32)          # (B,)
         # one op serves both impls: the fused kernel or its jnp oracle —
         # per-row ring-write + position-masking semantics live in exactly
-        # one place (kernels/decode_attention)
+        # one place (kernels/decode_attention).  A paged cache routes its
+        # page table through so the ring gather/write go via the pool.
         out, ck, cv, cpos = decode_attention(
             q, cache.k, cache.v, cache.pos, k.astype(cache.k.dtype),
             v.astype(cache.v.dtype), pos_b, window=window,
-            impl=cfg.attn_impl)
-        new_cache = KVCache(ck, cv, cpos)
+            impl=cfg.attn_impl, page_table=cache.page_table)
+        new_cache = KVCache(ck, cv, cpos, cache.page_table)
     else:
         # decode: write k/v into the ring slot, attend over the cache
+        assert cache.page_table is None, \
+            "paged caches decode through the per-sequence (B, T) path"
         S = cache.k.shape[2]
         pos = positions if positions.ndim == 0 else positions.reshape(-1)[0]
         if cache.pos is not None and cfg.attn_impl == "pallas" and T == 1:

@@ -404,22 +404,50 @@ def loss_fn(cfg: ModelConfig, params, tokens, labels,
 
 # ================================================================== cache ===
 
+# attention-cache kinds (ring KV caches); "ssm"/"rec" are state caches and
+# None marks cache-less positions (cross-only layers)
+KV_KINDS = ("full", "swa", "local", "chunked", "global_nope")
+
+
+def cache_layout(cfg: ModelConfig) -> List[Tuple[Tuple[Optional[str], ...],
+                                                 int]]:
+    """Cache kind of every (group, pattern-position) cache leaf.
+
+    Mirrors ``cfg.groups``: one ``(kinds, count)`` entry per group, where
+    ``kinds[pi]`` is the KV kind (member of :data:`KV_KINDS`, with
+    ``self_cross`` folded into ``"full"``), ``"ssm"``/``"rec"`` for state
+    caches, or ``None`` for positions that keep no per-step cache.  The
+    single source of truth for code that walks cache pytrees structurally
+    (``cache_init``, prefill alignment, the paged KV pool).
+    """
+    out: List[Tuple[Tuple[Optional[str], ...], int]] = []
+    for pattern, count in cfg.groups:
+        kinds: List[Optional[str]] = []
+        for mixer, _ in pattern:
+            if mixer == "self_cross":
+                kinds.append("full")
+            elif mixer in KV_KINDS or mixer in ("ssm", "rec"):
+                kinds.append(mixer)
+            else:
+                kinds.append(None)
+        out.append((tuple(kinds), count))
+    return out
+
+
 def cache_init(cfg: ModelConfig, batch: int, seq_len: int,
                ctx_embed: Optional[jax.Array] = None) -> Dict:
     """Build an empty decode cache for a context of ``seq_len``."""
     dt = jnp.dtype(cfg.dtype)
     groups = []
-    for pattern, count in cfg.groups:
+    for kinds, count in cache_layout(cfg):
         pos_caches = []
-        for mixer, _ in pattern:
-            if mixer == "ssm":
+        for kind in kinds:
+            if kind == "ssm":
                 c = S.ssm_cache_init(cfg, batch)
-            elif mixer == "rec":
+            elif kind == "rec":
                 c = R.rglru_cache_init(cfg, batch)
-            elif mixer in ("full", "swa", "local", "chunked", "global_nope",
-                           "self_cross"):
-                S_len = cfg.cache_len(mixer if mixer != "self_cross"
-                                      else "full", seq_len)
+            elif kind in KV_KINDS:
+                S_len = cfg.cache_len(kind, seq_len)
                 c = A.KVCache(
                     k=jnp.zeros((batch, cfg.n_kv_heads, S_len, cfg.head_dim),
                                 dt),
@@ -449,4 +477,4 @@ def decode_step(cfg: ModelConfig, params, cache: Dict, token: jax.Array,
 
 __all__ = ["ModelConfig", "param_template", "init_params", "param_count",
            "forward", "encode", "loss_fn", "logits_fn", "cache_init",
-           "decode_step"]
+           "cache_layout", "KV_KINDS", "decode_step"]

@@ -8,10 +8,13 @@ Public surface::
     streams = eng.run([Request(0, prompt, max_new_tokens=16), ...])
 """
 
-from .cache_manager import BatchedCacheManager
-from .engine import INSERT_EVENT, ServeEngine
+from .cache_manager import BatchedCacheManager, PagedCacheManager
+from .engine import (INSERT_EVENT, PAGE_INSERT_EVENT, SCRUB_EVENT,
+                     SWAP_IN_EVENT, SWAP_OUT_EVENT, ServeEngine)
 from .request import Request, Sequence, Status
 from .scheduler import SlotScheduler
 
 __all__ = ["ServeEngine", "Request", "Sequence", "Status",
-           "SlotScheduler", "BatchedCacheManager", "INSERT_EVENT"]
+           "SlotScheduler", "BatchedCacheManager", "PagedCacheManager",
+           "INSERT_EVENT", "PAGE_INSERT_EVENT", "SWAP_OUT_EVENT",
+           "SWAP_IN_EVENT", "SCRUB_EVENT"]

@@ -20,12 +20,15 @@ of the ring and the pos plane wholesale).
 
 from __future__ import annotations
 
-from typing import Any, Dict
+import math
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...models import model as M
+from .. import paging as P
 from ..step import cache_slot_extract, cache_slot_insert
 
 # one compiled insert/extract shared by every manager instance (jit
@@ -33,6 +36,13 @@ from ..step import cache_slot_extract, cache_slot_insert
 # managers of the same config reuse a single program)
 insert_jit = jax.jit(cache_slot_insert)
 extract_jit = jax.jit(cache_slot_extract)
+
+# paged-pool device ops, shared the same way (cfg is the static arg;
+# page ids and the slot index are traced, so every admission/retirement
+# of a given config reuses one compiled scatter/gather/scrub)
+paged_insert_jit = jax.jit(P.insert_pages, static_argnums=0)
+paged_extract_jit = jax.jit(P.extract_pages, static_argnums=0)
+paged_scrub_jit = jax.jit(P.scrub_pages, static_argnums=0)
 
 
 class BatchedCacheManager:
@@ -55,4 +65,146 @@ class BatchedCacheManager:
         self.cache = cache
 
 
-__all__ = ["BatchedCacheManager"]
+class PagedCacheManager:
+    """Block-granular cache manager over the paged KV pool.
+
+    Owns the per-kind arenas (``paging.paged_cache_init``), the host-side
+    page tables, and a free-list :class:`~repro.serve.paging.PageAllocator`
+    per cache kind.  Slots cost nothing until pages are bound to them:
+    admission allocates exactly the pages the prompt fills, decode grows
+    a sequence one page at a time (``ensure_writable``), and retirement
+    returns pages to the free list after scrubbing their validity planes.
+
+    ``pool_pages`` caps the allocatable pages of every kind (clamped to
+    the dense-equivalent full provision ``n_slots · W/page_size``; at
+    least one budget-length sequence must always fit).  The default
+    (None) is full provision — paged layout with dense capacity.
+    """
+
+    def __init__(self, cfg: M.ModelConfig, n_slots: int, budget: int,
+                 page_size: int = 4, pool_pages: Optional[int] = None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.budget = budget
+        self.page_size = page_size
+        self.widths = P.kv_widths(cfg, budget)
+        assert self.widths, \
+            "paged serving needs at least one attention cache kind"
+        self.n_ptes: Dict[str, int] = {}
+        arena: Dict[str, int] = {}
+        for kind, W in self.widths.items():
+            assert W % page_size == 0, \
+                f"page_size {page_size} must divide the {kind!r} ring " \
+                f"width {W}"
+            n_ptes = W // page_size
+            full = n_slots * n_ptes
+            cap = full if pool_pages is None else min(pool_pages, full)
+            assert cap >= n_ptes, \
+                f"pool of {cap} {kind!r} pages cannot hold one " \
+                f"budget-length sequence ({n_ptes} pages)"
+            self.n_ptes[kind] = n_ptes
+            arena[kind] = cap
+        self.alloc = {kind: P.PageAllocator(cap + 1)
+                      for kind, cap in arena.items()}
+        self.tables = {kind: np.full((n_slots, n), P.PAGE_NULL, np.int32)
+                       for kind, n in self.n_ptes.items()}
+        self.cache: Dict[str, Any] = P.paged_cache_init(
+            cfg, n_slots, budget, page_size, arena)
+        self._dirty = True
+
+    # -- page accounting -------------------------------------------------
+    def used_ptes(self, kind: str, n_positions: int) -> int:
+        """Pages of ``kind`` a sequence with ``n_positions`` written
+        positions occupies: the ring wraps in place once full."""
+        W = self.widths[kind]
+        if n_positions >= W:
+            return self.n_ptes[kind]
+        return math.ceil(max(n_positions, 0) / self.page_size)
+
+    def can_admit(self, n_positions: int) -> bool:
+        """True iff every kind has the pages a sequence with
+        ``n_positions`` already-written positions needs right now
+        (optimistic: later growth is served lazily, preempting if the
+        pool runs dry)."""
+        return all(self.alloc[kind].n_free >= self.used_ptes(kind,
+                                                             n_positions)
+                   for kind in self.widths)
+
+    def admit_pages(self, slot: int, n_positions: int) -> bool:
+        """Bind the pages for ``n_positions`` written positions to
+        ``slot`` (all kinds, all-or-nothing with rollback)."""
+        granted: List = []
+        for kind in self.widths:
+            ids = self.alloc[kind].alloc(self.used_ptes(kind, n_positions))
+            if ids is None:
+                for k, i in granted:
+                    self.alloc[k].free(i)
+                return False
+            granted.append((kind, ids))
+        for kind, ids in granted:
+            row = self.tables[kind][slot]
+            row[:] = P.PAGE_NULL
+            row[:len(ids)] = ids
+        self._dirty = True
+        return True
+
+    def ensure_writable(self, slot: int, pos: int) -> bool:
+        """Make sure the ring slot position ``pos`` writes to is backed by
+        a real page in every kind, growing the sequence lazily.  False on
+        pool exhaustion (the engine preempts and retries)."""
+        need = []
+        for kind, W in self.widths.items():
+            pte = (pos % W) // self.page_size
+            if self.tables[kind][slot, pte] == P.PAGE_NULL:
+                if self.alloc[kind].n_free < 1:
+                    return False
+                need.append((kind, pte))
+        for kind, pte in need:
+            (page,) = self.alloc[kind].alloc(1)
+            self.tables[kind][slot, pte] = page
+            self._dirty = True
+        return True
+
+    def release_slot(self, slot: int) -> Dict[str, np.ndarray]:
+        """Free the slot's pages and null its table rows.  Returns the
+        pre-release rows — the page ids whose validity planes the caller
+        must scrub (``paging.scrub_pages``) before reuse."""
+        rows = {kind: self.tables[kind][slot].copy()
+                for kind in self.widths}
+        for kind, row in rows.items():
+            self.alloc[kind].free(int(p) for p in row
+                                  if p != P.PAGE_NULL)
+            self.tables[kind][slot] = P.PAGE_NULL
+        self._dirty = True
+        return rows
+
+    def table_ids(self, slot: int) -> Dict[str, np.ndarray]:
+        """Copy of the slot's current page-table rows (per kind)."""
+        return {kind: self.tables[kind][slot].copy()
+                for kind in self.widths}
+
+    # -- device side -----------------------------------------------------
+    def sync(self) -> None:
+        """Push the host tables into the cache pytree's ``page_table``
+        leaves (no-op when nothing changed since the last sync)."""
+        if self._dirty:
+            self.cache = P.with_page_tables(self.cfg, self.cache,
+                                            self.tables)
+            self._dirty = False
+
+    def update(self, cache: Dict[str, Any]) -> None:
+        """Adopt the cache pytree returned by a decode / insert / scrub
+        step."""
+        self.cache = cache
+
+    # -- stats -----------------------------------------------------------
+    def pages_held(self) -> Dict[str, int]:
+        return {kind: a.n_held for kind, a in self.alloc.items()}
+
+    def resident_bytes(self) -> int:
+        """K/V bytes of the standing arenas (the pool's real footprint)."""
+        return P.kv_resident_bytes(self.cache)
+
+
+__all__ = ["BatchedCacheManager", "PagedCacheManager", "paged_insert_jit",
+           "paged_extract_jit", "paged_scrub_jit"]

@@ -26,6 +26,20 @@ submissions, "Decode" carries ``DECODE_KERNEL``), so ``prof.Prof`` shows
 admission/prefill/decode interleaving with zero extra instrumentation —
 the cf4ocl profiling model applied to serving.
 
+**Paged mode** (``paged=True``): the standing cache is the paged KV pool
+(``serve/paging.py``) instead of dense per-slot rings.  Admission binds
+only the pages the prompt fills (the aligned prefill cache is cut into
+page blocks and *donated* into the arenas — no slot-shaped copy exists),
+decode grows each sequence one page at a time, and retirement returns
+pages to the free list.  The scheduler gate becomes *pages free* rather
+than slots free, and on pool exhaustion the engine **preempts the
+youngest sequence** (latest arrival; ties by rid): its page blocks are
+swapped out verbatim, its pages freed, and it re-queues at the *front*
+of the wait queue, so resumption restores the exact cache bits and the
+output stream is bit-identical to an uninterrupted run.  Swapped blocks
+stay device-resident (host offload is an open item) — preemption
+relieves *pool* pressure, which is the contended resource.
+
 Simplifications (documented, not accidental): greedy sampling unless a
 ``sample_fn`` is supplied; one prefill per admission (no prompt
 batching/bucketing — distinct prompt lengths retrace the prefill jit);
@@ -46,11 +60,17 @@ from ...core import Context, DispatchQueue
 from ...models import model as M
 from ..step import (ALIGN_EVENT, DECODE_EVENT, PREFILL_EVENT,
                     make_align_step, make_decode_step, make_prefill_step)
-from .cache_manager import BatchedCacheManager, insert_jit
+from .cache_manager import (BatchedCacheManager, PagedCacheManager,
+                            insert_jit, paged_extract_jit, paged_insert_jit,
+                            paged_scrub_jit)
 from .request import Request, Sequence, Status
 from .scheduler import SlotScheduler
 
 INSERT_EVENT = "SLOT_INSERT"
+PAGE_INSERT_EVENT = "PAGE_INSERT"
+SWAP_OUT_EVENT = "SWAP_OUT"
+SWAP_IN_EVENT = "SWAP_IN"
+SCRUB_EVENT = "PAGE_SCRUB"
 
 
 class ServeEngine:
@@ -58,17 +78,23 @@ class ServeEngine:
                  budget: int = 128, context: Optional[Context] = None,
                  prefill_impl: Optional[str] = None,
                  sample_fn: Optional[Callable[[np.ndarray], np.ndarray]]
-                 = None):
+                 = None, paged: bool = False, page_size: int = 4,
+                 pool_pages: Optional[int] = None):
         """``budget`` is the decode position budget: prompt length + new
         tokens of any request must fit in it.  ``prefill_impl`` overrides
         ``cfg.attn_impl`` for prefill only (e.g. decode on the fused
-        Pallas kernel while prefill stays on XLA)."""
+        Pallas kernel while prefill stays on XLA).  ``paged`` switches
+        the standing cache to the paged KV pool; ``pool_pages`` caps the
+        allocatable pages per cache kind (None = dense-equivalent full
+        provision), which is where the memory win comes from."""
         assert not cfg.has_cross, \
             "serve engine does not support cross-attention models"
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.budget = budget
+        self.paged = paged
+        self.page_size = page_size
         pcfg = cfg if prefill_impl is None else \
             dataclasses.replace(cfg, attn_impl=prefill_impl)
         self._prefill = make_prefill_step(pcfg)
@@ -77,7 +103,12 @@ class ServeEngine:
         self._sample = sample_fn or (lambda lg: np.argmax(lg, axis=-1))
 
         self.scheduler = SlotScheduler(n_slots)
-        self.cache_mgr = BatchedCacheManager(cfg, n_slots, budget)
+        if paged:
+            self.cache_mgr = PagedCacheManager(cfg, n_slots, budget,
+                                               page_size=page_size,
+                                               pool_pages=pool_pages)
+        else:
+            self.cache_mgr = BatchedCacheManager(cfg, n_slots, budget)
         ctx = context or Context.new_accel()
         self.q_admit = DispatchQueue(ctx, "Admit")
         self.q_decode = DispatchQueue(ctx, "Decode")
@@ -89,7 +120,7 @@ class ServeEngine:
         self.sequences: List[Sequence] = []
         self.tick = 0       # == ticks elapsed; steps/tokens in stats
         self.stats = {"decode_steps": 0, "decoded_tokens": 0,
-                      "prefills": 0}
+                      "prefills": 0, "preemptions": 0, "swap_ins": 0}
 
     # -- client side -----------------------------------------------------
     def submit(self, request: Request) -> Sequence:
@@ -108,20 +139,53 @@ class ServeEngine:
     def _retire(self, seq: Sequence) -> None:
         seq.status = Status.FINISHED
         seq.finished_at = self.tick
-        self._pos[seq.slot] = -1
-        del self._slot_seq[seq.slot]
-        self.scheduler.release(seq.slot)
+        self._release_slot(seq.slot)
 
-    def _admit(self) -> List[Sequence]:
-        admitted = []
-        for seq, slot in self.scheduler.admit():
-            prompt = jnp.asarray(seq.request.prompt, jnp.int32)[None, :]
-            logits, cache = self.q_admit.enqueue(
-                self._prefill, self.params, prompt,
-                name=PREFILL_EVENT, command_type=PREFILL_EVENT)
-            # relayout and slot packing are enqueued as *pure* jitted fns
-            # whose outputs are the events' outputs — finish() fences
-            # them and the spans track the copies, not host dispatch
+    def _release_slot(self, slot: int) -> None:
+        self._pos[slot] = -1
+        del self._slot_seq[slot]
+        if self.paged:
+            # scrub the freed pages' validity planes before they return
+            # to the free list (pool invariant: free pages carry pos=-1)
+            ids = self.cache_mgr.release_slot(slot)
+            cache = self.q_admit.enqueue(
+                paged_scrub_jit, self.cfg, self.cache_mgr.cache, ids,
+                name=SCRUB_EVENT, command_type=SCRUB_EVENT)
+            self.cache_mgr.update(cache)
+        self.scheduler.release(slot)
+
+    def _bind(self, seq: Sequence, slot: int, first_tok: int) -> None:
+        """Common post-admission bookkeeping: activate, stream the first
+        token (which may retire a one-token request on the spot), arm the
+        slot's decode inputs."""
+        seq.status = Status.ACTIVE
+        seq.admitted_at = self.tick
+        self._slot_seq[slot] = seq
+        if seq.emit(first_tok):
+            self._retire(seq)
+        else:
+            self._tokens[slot, 0] = first_tok
+            self._pos[slot] = seq.pos
+
+    def _prefill_admit(self, seq: Sequence, slot: int) -> None:
+        prompt = jnp.asarray(seq.request.prompt, jnp.int32)[None, :]
+        logits, cache = self.q_admit.enqueue(
+            self._prefill, self.params, prompt,
+            name=PREFILL_EVENT, command_type=PREFILL_EVENT)
+        # relayout and slot packing are enqueued as *pure* jitted fns
+        # whose outputs are the events' outputs — finish() fences
+        # them and the spans track the copies, not host dispatch
+        if self.paged:
+            align = make_align_step(self.cfg, seq.prompt_len,
+                                    target_len=self.budget,
+                                    page_size=self.page_size)
+            blocks = self.q_admit.enqueue(align, cache, name=ALIGN_EVENT,
+                                          command_type=ALIGN_EVENT)
+            packed = self.q_admit.enqueue(
+                paged_insert_jit, self.cfg, self.cache_mgr.cache, blocks,
+                self.cache_mgr.table_ids(slot), jnp.int32(slot),
+                name=PAGE_INSERT_EVENT, command_type=PAGE_INSERT_EVENT)
+        else:
             align = make_align_step(self.cfg, seq.prompt_len,
                                     target_len=self.budget)
             cache = self.q_admit.enqueue(align, cache, name=ALIGN_EVENT,
@@ -129,23 +193,96 @@ class ServeEngine:
             packed = self.q_admit.enqueue(
                 insert_jit, self.cache_mgr.cache, cache, jnp.int32(slot),
                 name=INSERT_EVENT, command_type=INSERT_EVENT)
-            self.cache_mgr.update(packed)
-            self.stats["prefills"] += 1
-            seq.status = Status.ACTIVE
-            seq.admitted_at = self.tick
-            seq.pos = seq.prompt_len
-            self._slot_seq[slot] = seq
-            # first output token comes from the prefill logits
-            t0 = int(self._sample(np.asarray(logits[:, -1]))[0])
-            if seq.emit(t0):
-                self._retire(seq)
+        self.cache_mgr.update(packed)
+        self.stats["prefills"] += 1
+        seq.pos = seq.prompt_len
+        # first output token comes from the prefill logits
+        t0 = int(self._sample(np.asarray(logits[:, -1]))[0])
+        self._bind(seq, slot, t0)
+
+    def _swap_in(self, seq: Sequence, slot: int) -> None:
+        """Resume a preempted sequence: scatter its swapped page blocks
+        into freshly bound pages and restore its decode inputs verbatim
+        (bit-identical to never having been preempted)."""
+        packed = self.q_admit.enqueue(
+            paged_insert_jit, self.cfg, self.cache_mgr.cache, seq.swap,
+            self.cache_mgr.table_ids(slot), jnp.int32(slot),
+            name=SWAP_IN_EVENT, command_type=SWAP_IN_EVENT)
+        self.cache_mgr.update(packed)
+        seq.swap = None
+        self.stats["swap_ins"] += 1
+        seq.status = Status.ACTIVE
+        seq.admitted_at = self.tick
+        self._slot_seq[slot] = seq
+        self._tokens[slot, 0] = seq.next_tok
+        self._pos[slot] = seq.pos
+
+    def _admit(self) -> List[Sequence]:
+        if not self.paged:
+            admitted = []
+            for seq, slot in self.scheduler.admit():
+                self._prefill_admit(seq, slot)
+                admitted.append(seq)
+            return admitted
+        # paged: gate each admission on pages free, not just slots free.
+        # Gating the head blocks the queue — FIFO admission stays FIFO.
+        admitted = []
+        while True:
+            head = self.scheduler.peek()
+            if head is None:
+                break
+            resume = head.status is Status.PREEMPTED
+            need = head.pos if resume else head.prompt_len
+            if not self.cache_mgr.can_admit(need):
+                break
+            seq, slot = self.scheduler.pop_bind()
+            ok = self.cache_mgr.admit_pages(slot, need)
+            assert ok, "gate passed but allocation failed"
+            if resume:
+                self._swap_in(seq, slot)
             else:
-                self._tokens[slot, 0] = t0
-                self._pos[slot] = seq.pos
+                self._prefill_admit(seq, slot)
             admitted.append(seq)
         return admitted
 
+    # -- paged-pool pressure ---------------------------------------------
+    def _preempt_one(self) -> Sequence:
+        """Evict the youngest active sequence (latest arrival, ties by
+        rid): swap its page blocks out, free its pages, requeue it at the
+        front.  Returns the victim."""
+        cands = list(self._slot_seq.values())
+        if len(cands) <= 1:
+            raise RuntimeError(
+                "paged pool exhausted with a single active sequence — "
+                "the arena cannot hold one budget-length request")
+        victim = max(cands, key=lambda s: (s.request.arrival, s.rid))
+        slot = victim.slot
+        victim.swap = self.q_admit.enqueue(
+            paged_extract_jit, self.cfg, self.cache_mgr.cache,
+            self.cache_mgr.table_ids(slot), jnp.int32(slot),
+            name=SWAP_OUT_EVENT, command_type=SWAP_OUT_EVENT)
+        victim.next_tok = int(self._tokens[slot, 0])
+        victim.status = Status.PREEMPTED
+        victim.preemptions += 1
+        victim.slot = -1
+        self._release_slot(slot)
+        self.scheduler.requeue_front(victim)
+        self.stats["preemptions"] += 1
+        return victim
+
+    def _provision(self) -> None:
+        """Back every active slot's next ring write with a real page,
+        preempting the youngest sequence(s) on pool exhaustion."""
+        for slot in sorted(self._slot_seq):
+            while slot in self._slot_seq and not \
+                    self.cache_mgr.ensure_writable(slot,
+                                                   int(self._pos[slot])):
+                self._preempt_one()
+
     def _decode_tick(self) -> List[Sequence]:
+        if self.paged:
+            self._provision()
+            self.cache_mgr.sync()
         active = sorted(self._slot_seq)
         if not active:
             return []
@@ -204,4 +341,5 @@ class ServeEngine:
         self.q_decode.finish()
 
 
-__all__ = ["ServeEngine", "INSERT_EVENT"]
+__all__ = ["ServeEngine", "INSERT_EVENT", "PAGE_INSERT_EVENT",
+           "SWAP_OUT_EVENT", "SWAP_IN_EVENT", "SCRUB_EVENT"]

@@ -29,6 +29,8 @@ from typing import List, Optional, Sequence as Seq
 class Status(enum.Enum):
     QUEUED = "queued"        # submitted, waiting for a free slot
     ACTIVE = "active"        # bound to a slot, decoding
+    PREEMPTED = "preempted"  # evicted from the paged pool; KV swapped
+                             # out, queued at the front for resumption
     FINISHED = "finished"    # budget exhausted or EOS; slot released
 
 
@@ -57,6 +59,12 @@ class Sequence:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     admitted_at: int = -1             # tick stamps for latency accounting
     finished_at: int = -1
+    # preemption swap state (paged engine): the sequence's extracted page
+    # blocks and the pending decode-input token, restored verbatim on
+    # resumption so the stream is bit-identical to an uninterrupted run
+    swap: Optional[object] = None
+    next_tok: int = -1
+    preemptions: int = 0
 
     @property
     def rid(self) -> int:

@@ -8,6 +8,14 @@ batch width).  The scheduler owns the slot ⇄ request binding:
 * **admit** pops waiting requests into free slots, lowest slot index
   first (deterministic packing — replays and tests see identical slot
   assignments);
+* **peek / pop_bind** expose admission one candidate at a time, so an
+  engine can gate each admission on a second resource (the paged KV
+  pool admits on *pages free*, not just slots free) without the
+  scheduler knowing about pages; gating the head blocks the whole queue
+  (no skip-ahead — FIFO stays FIFO);
+* **requeue_front** puts a preempted sequence back at the *head* of the
+  wait queue: a sequence evicted to relieve pool pressure resumes
+  before any fresh request is admitted;
 * **release** returns a finished sequence's slot to the free pool, where
   the next admission reuses it (the whole point of continuous batching:
   a retired slot turns into fresh work without draining the batch).
@@ -21,7 +29,7 @@ from __future__ import annotations
 
 import heapq
 from collections import deque
-from typing import Deque, List, Tuple
+from typing import Deque, List, Optional, Tuple
 
 from .request import Request, Sequence
 
@@ -40,6 +48,11 @@ class SlotScheduler:
         self._waiting.append(seq)
         return seq
 
+    def requeue_front(self, seq: Sequence) -> None:
+        """Put a preempted sequence at the head of the wait queue (it
+        resumes before any fresh admission)."""
+        self._waiting.appendleft(seq)
+
     @property
     def n_waiting(self) -> int:
         return len(self._waiting)
@@ -53,11 +66,22 @@ class SlotScheduler:
         """Bind waiting sequences to free slots (FIFO × lowest-slot)."""
         admitted: List[Tuple[Sequence, int]] = []
         while self._waiting and self._free:
-            slot = heapq.heappop(self._free)
-            seq = self._waiting.popleft()
-            seq.slot = slot
-            admitted.append((seq, slot))
+            admitted.append(self.pop_bind())
         return admitted
+
+    def peek(self) -> Optional[Sequence]:
+        """Head of the wait queue if a slot is free for it, else None."""
+        if self._waiting and self._free:
+            return self._waiting[0]
+        return None
+
+    def pop_bind(self) -> Tuple[Sequence, int]:
+        """Pop the queue head and bind it to the lowest free slot (the
+        caller gates via :meth:`peek` first)."""
+        slot = heapq.heappop(self._free)
+        seq = self._waiting.popleft()
+        seq.slot = slot
+        return seq, slot
 
     def release(self, slot: int) -> None:
         assert 0 <= slot < self.n_slots

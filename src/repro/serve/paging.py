@@ -1,0 +1,298 @@
+"""Paged KV-cache pool: block-granular memory management for serving.
+
+The dense serve cache (``model.cache_init(cfg, n_slots, budget)``) pins
+every slot at the full decode budget — a 16-token request holds the same
+KV memory as a 4096-token one.  The paged pool replaces the per-slot
+rings with **one standing arena per cache kind**:
+
+* K/V arenas ``(n_pages, kv_heads, page_size, head_dim)`` shared by every
+  sequence (stacked over the layer dim like every other cache leaf, so
+  page ``p`` names the same logical page in every layer of the kind);
+* a paged validity plane ``(n_pages, page_size)`` int32 (``-1`` = slot
+  never written / page free);
+* a per-slot **page table** ``(n_slots, n_ptes)`` int32 carried inside
+  each :class:`~repro.models.attention.KVCache` leaf, mapping logical
+  ring page ``t`` to a physical arena page.
+
+Page 0 of every arena is the reserved **null page** (:data:`PAGE_NULL`):
+table entries of idle slots and not-yet-grown ring tails point at it, its
+stored positions stay ``-1`` forever, and nothing ever attends to it.
+
+The ring invariant becomes *page-local*: slot ``j`` of logical page ``t``
+holds absolute position ``p ≡ (t·page_size + j) (mod W)`` where
+``W = n_ptes·page_size`` is the budget-derived ring width — i.e. the
+logical ring is unchanged and merely scattered over physical pages, which
+is why the paged decode path is bit-identical to the dense oracle.
+
+Pool invariant maintained by the cache manager: **free pages carry
+``pos = -1`` in every slot** — established at init, preserved by
+:func:`scrub_pages` before pages return to the free list — so a lazily
+allocated page needs no cleaning before its first write.
+
+:class:`PageAllocator` is the deliberately host-side free list (lowest
+page id first — deterministic, like the slot scheduler); all device work
+(page scatter/gather/scrub) lives in the jit-able tree functions below,
+which walk the cache pytree by ``model.cache_layout``.  State caches
+(ssm / rec) are O(1) per slot and stay dense batch-indexed; the insert /
+extract helpers move them by batch slot exactly like the dense engine.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+from ..models import rglru as R
+from ..models import ssm as S
+from ..models.attention import KVCache
+
+PAGE_NULL = 0
+
+
+class PageAllocator:
+    """Free-list allocator over the physical pages of one arena.
+
+    Page ids ``[n_reserved, n_pages)`` are allocatable; ``0`` (and any
+    further reserved prefix) never leaves the allocator.  Allocation is
+    lowest-id-first and all-or-nothing; double-free and foreign-page
+    frees are assertion errors.
+    """
+
+    def __init__(self, n_pages: int, n_reserved: int = 1):
+        assert n_pages > n_reserved >= 1, (n_pages, n_reserved)
+        self.n_pages = n_pages
+        self.n_reserved = n_reserved
+        self._free: List[int] = list(range(n_reserved, n_pages))
+        heapq.heapify(self._free)
+        self._held: Set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_held(self) -> int:
+        return len(self._held)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` pages (lowest ids first), or None if fewer are free —
+        never a partial grant."""
+        assert n >= 0
+        if n > len(self._free):
+            return None
+        out = [heapq.heappop(self._free) for _ in range(n)]
+        self._held.update(out)
+        return out
+
+    def free(self, pages) -> None:
+        for p in pages:
+            p = int(p)
+            if p == PAGE_NULL:          # null entries ride along in rows
+                continue
+            assert p in self._held, f"page {p} double-freed or foreign"
+            self._held.discard(p)
+            heapq.heappush(self._free, p)
+
+
+# ------------------------------------------------------------ structure ----
+
+def kv_widths(cfg: M.ModelConfig, budget: int) -> Dict[str, int]:
+    """Ring width per KV cache kind present in ``cfg`` at ``budget``."""
+    out: Dict[str, int] = {}
+    for kinds, _ in M.cache_layout(cfg):
+        for kind in kinds:
+            if kind in M.KV_KINDS:
+                out[kind] = cfg.cache_len(kind, budget)
+    return out
+
+
+def _walk(cfg: M.ModelConfig, cache: Dict, kv_fn, state_fn=None,
+          blocks: Optional[Dict] = None) -> Dict:
+    """Rebuild ``cache`` with ``kv_fn(kind, leaf, blk)`` on every KV leaf
+    and ``state_fn(kind, leaf, blk)`` (when given) on ssm/rec leaves;
+    everything else passes through.  ``blk`` is the mirroring leaf of
+    ``blocks`` (None when no blocks tree rides along) — the one tree
+    traversal every pool operation shares."""
+    out = {k: v for k, v in cache.items() if k != "groups"}
+    groups = []
+    for gi, (kinds, _) in enumerate(M.cache_layout(cfg)):
+        leaves = []
+        for pi, kind in enumerate(kinds):
+            c = cache["groups"][gi][pi]
+            blk = None if blocks is None else blocks["groups"][gi][pi]
+            if kind in M.KV_KINDS and isinstance(c, KVCache):
+                c = kv_fn(kind, c, blk)
+            elif kind in ("ssm", "rec") and c is not None \
+                    and state_fn is not None:
+                c = state_fn(kind, c, blk)
+            leaves.append(c)
+        groups.append(tuple(leaves))
+    out["groups"] = groups
+    return out
+
+
+def paged_cache_init(cfg: M.ModelConfig, n_slots: int, budget: int,
+                     page_size: int, arena_pages: Dict[str, int]) -> Dict:
+    """Standing paged decode cache: per-kind arenas + all-null tables.
+
+    ``arena_pages[kind]`` counts allocatable pages *excluding* the null
+    page (the arrays are one page larger).  State caches (ssm / rec)
+    keep the dense batch-indexed layout of ``cache_init``.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    groups = []
+    for kinds, count in M.cache_layout(cfg):
+        leaves = []
+        for kind in kinds:
+            if kind == "ssm":
+                c = S.ssm_cache_init(cfg, n_slots)
+            elif kind == "rec":
+                c = R.rglru_cache_init(cfg, n_slots)
+            elif kind in M.KV_KINDS:
+                W = cfg.cache_len(kind, budget)
+                assert W % page_size == 0, \
+                    f"page_size {page_size} must divide the {kind!r} " \
+                    f"ring width {W}"
+                n_pages = arena_pages[kind] + 1      # + reserved null page
+                k = jnp.zeros((n_pages, cfg.n_kv_heads, page_size,
+                               cfg.head_dim), dt)
+                c = KVCache(k, jnp.zeros_like(k),
+                            jnp.full((n_pages, page_size), -1, jnp.int32),
+                            jnp.full((n_slots, W // page_size), PAGE_NULL,
+                                     jnp.int32))
+            else:
+                c = None
+            # broadcast (not zero-fill) over the layer dim, as cache_init
+            # does, so non-zero initial state (pos = -1, null tables)
+            # survives the stacking
+            leaves.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape), c))
+        groups.append(tuple(leaves))
+    return {"groups": groups}
+
+
+# ------------------------------------------------------- device tree ops ---
+
+def ring_to_page_blocks(cfg: M.ModelConfig, one_cache: Dict,
+                        page_size: int) -> Dict:
+    """Cut a batch=1 budget-aligned dense cache into page blocks.
+
+    Every KV leaf ``(count, 1, Hkv, W, D)`` becomes a
+    ``KVCache((count, n_ptes, Hkv, ps, D), …, pos=(count, n_ptes, ps))``
+    block stack in logical ring-page order — what :func:`insert_pages`
+    scatters into the arenas.  Pure data movement (one reshape/transpose
+    per leaf), jit-able; state leaves pass through as batch=1 slices.
+    """
+    def cut(kind: str, c: KVCache, _blk) -> KVCache:
+        assert c.pos is not None, "paged serving needs position-carrying " \
+            "caches (prefill collect_kv always emits them)"
+        count, b, Hkv, W, D = c.k.shape
+        assert b == 1, "page donation takes batch=1 prefill caches"
+        n_ptes = W // page_size
+        k = c.k[:, 0].reshape(count, Hkv, n_ptes, page_size, D)
+        v = c.v[:, 0].reshape(count, Hkv, n_ptes, page_size, D)
+        return KVCache(k.transpose(0, 2, 1, 3, 4),
+                       v.transpose(0, 2, 1, 3, 4),
+                       c.pos[:, 0].reshape(count, n_ptes, page_size))
+
+    return _walk(cfg, one_cache, cut)
+
+
+def insert_pages(cfg: M.ModelConfig, cache: Dict, blocks: Dict,
+                 ids: Dict[str, Any], slot) -> Dict:
+    """Scatter one sequence's page blocks into the arenas (jit-able;
+    ``ids`` and ``slot`` may be traced).
+
+    ``ids[kind]`` is the sequence's page-table row ``(n_ptes,)`` int32 —
+    real page ids for pages the sequence owns, :data:`PAGE_NULL` for ring
+    tail pages it has not grown into yet (their blocks land in the null
+    page, which is garbage by contract).  KV blocks come from
+    :func:`ring_to_page_blocks` (admission donates the prefill's pages)
+    or :func:`extract_pages` (swap-in); state blocks are batch=1 leaves
+    written into batch ``slot`` of the dense state caches.
+    """
+    def ins(kind, c, blk):
+        i = jnp.asarray(ids[kind], jnp.int32)
+        return KVCache(c.k.at[:, i].set(blk.k.astype(c.k.dtype)),
+                       c.v.at[:, i].set(blk.v.astype(c.v.dtype)),
+                       c.pos.at[:, i].set(blk.pos),
+                       c.page_table)
+
+    def ins_state(kind, c, blk):
+        return jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice(
+                d, s.astype(d.dtype),
+                (0, slot) + (0,) * (d.ndim - 2)),
+            c, blk)
+
+    return _walk(cfg, cache, ins, ins_state, blocks=blocks)
+
+
+def extract_pages(cfg: M.ModelConfig, cache: Dict, ids: Dict[str, Any],
+                  slot) -> Dict:
+    """Gather one sequence's page blocks back out (inverse of
+    :func:`insert_pages`; jit-able).  Null table entries gather the null
+    page — garbage the matching insert writes straight back, so a
+    swap-out → swap-in round trip is bit-exact on every owned page."""
+    def ext(kind: str, c: KVCache, _blk) -> KVCache:
+        i = jnp.asarray(ids[kind], jnp.int32)
+        return KVCache(c.k[:, i], c.v[:, i], c.pos[:, i])
+
+    def ext_state(kind, c, _blk):
+        def take(a):
+            sizes = list(a.shape)
+            sizes[1] = 1
+            return jax.lax.dynamic_slice(
+                a, (0, slot) + (0,) * (a.ndim - 2), tuple(sizes))
+
+        return jax.tree.map(take, c)
+
+    return _walk(cfg, cache, ext, ext_state)
+
+
+def scrub_pages(cfg: M.ModelConfig, cache: Dict,
+                ids: Dict[str, Any]) -> Dict:
+    """Invalidate pages before they return to the free list: their paged
+    ``pos`` planes go back to ``-1`` (jit-able).  This is the whole
+    retirement cost of the paged pool — K/V bytes are left in place and
+    garbage-masked, exactly like dense slot retirement."""
+    def scrub(kind: str, c: KVCache, _blk) -> KVCache:
+        i = jnp.asarray(ids[kind], jnp.int32)
+        return KVCache(c.k, c.v, c.pos.at[:, i].set(-1), c.page_table)
+
+    return _walk(cfg, cache, scrub)
+
+
+def with_page_tables(cfg: M.ModelConfig, cache: Dict,
+                     tables: Dict[str, np.ndarray]) -> Dict:
+    """Rebuild every KV leaf's ``page_table`` from the host-side tables
+    (host → device of a few hundred bytes; runs outside jit)."""
+    def put(kind: str, c: KVCache, _blk) -> KVCache:
+        count = c.k.shape[0]
+        t = jnp.asarray(np.asarray(tables[kind], np.int32))
+        return KVCache(c.k, c.v, c.pos,
+                       jnp.broadcast_to(t, (count,) + t.shape))
+
+    return _walk(cfg, cache, put)
+
+
+def kv_resident_bytes(cache: Dict) -> int:
+    """Total K/V bytes held by the cache pytree's attention leaves (the
+    arenas for a paged cache, the per-slot rings for a dense one)."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            cache, is_leaf=lambda x: isinstance(x, KVCache)):
+        if isinstance(leaf, KVCache):
+            total += leaf.k.size * leaf.k.dtype.itemsize
+            total += leaf.v.size * leaf.v.dtype.itemsize
+    return total
+
+
+__all__ = ["PAGE_NULL", "PageAllocator", "kv_widths", "paged_cache_init",
+           "ring_to_page_blocks", "insert_pages", "extract_pages",
+           "scrub_pages", "with_page_tables", "kv_resident_bytes"]

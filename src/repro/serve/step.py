@@ -69,33 +69,50 @@ _cached_decode = functools.cache(_build_decode_step)
 
 
 def make_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
-    """Jitted prefill step; cached on cfg so rebuilds never retrace."""
-    if ctx is None:
-        return _cached_prefill(cfg)
-    return _build_prefill_step(cfg, ctx)
+    """Jitted prefill step; cached on ``(cfg, ctx)`` — ``ShardCtx`` hashes
+    by identity, so servers that rebuild steps per request never retrace
+    as long as they hold on to their context (as they should: the cache
+    retains every distinct ctx and its compiled step for the process
+    lifetime, so churning fresh ShardCtx objects leaks executables)."""
+    return _cached_prefill(cfg, ctx)
 
 
 def make_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
-    """Jitted decode step; cached on cfg so rebuilds never retrace."""
-    if ctx is None:
-        return _cached_decode(cfg)
-    return _build_decode_step(cfg, ctx)
+    """Jitted decode step; cached on ``(cfg, ctx)`` (see
+    :func:`make_prefill_step`)."""
+    return _cached_decode(cfg, ctx)
 
 
 def _build_align_step(cfg: M.ModelConfig, seq_len: int,
-                      target_len: Optional[int]):
-    return jax.jit(
-        lambda cache: align_prefill_cache(cfg, cache, seq_len, target_len))
+                      target_len: Optional[int],
+                      page_size: Optional[int]):
+    if page_size is None:
+        return jax.jit(
+            lambda cache: align_prefill_cache(cfg, cache, seq_len,
+                                              target_len))
+
+    from .paging import ring_to_page_blocks  # circular-import guard
+
+    def align_paged(cache):
+        aligned = align_prefill_cache(cfg, cache, seq_len, target_len)
+        return ring_to_page_blocks(cfg, aligned, page_size)
+
+    return jax.jit(align_paged)
 
 
 _cached_align = functools.cache(_build_align_step)
 
 
 def make_align_step(cfg: M.ModelConfig, seq_len: int,
-                    target_len: Optional[int] = None):
+                    target_len: Optional[int] = None,
+                    page_size: Optional[int] = None):
     """Jitted prefill→decode cache relayout (one fused program instead of
-    eager per-layer gathers/pads); cached on (cfg, lengths)."""
-    return _cached_align(cfg, seq_len, target_len)
+    eager per-layer gathers/pads); cached on (cfg, lengths, page_size).
+
+    With ``page_size`` set, the aligned ring is additionally cut into
+    page blocks (``paging.ring_to_page_blocks``) — the form the paged
+    pool's admission scatter consumes, fused into the same program."""
+    return _cached_align(cfg, seq_len, target_len, page_size)
 
 
 def _ring_gather_idx(seq_len: int, W: int) -> np.ndarray:
@@ -124,18 +141,24 @@ def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
       the position test); existing slots already satisfy the invariant
       (position j sits in slot j = j mod W).
     """
-    budget = target_len or seq_len
+    # explicit None test: ``target_len or seq_len`` would silently turn a
+    # caller's (buggy) target_len=0 into "no target"
+    if target_len is None:
+        budget = seq_len
+    else:
+        assert target_len >= 1, \
+            f"target_len must be a positive decode budget, got {target_len}"
+        budget = target_len
     assert budget >= seq_len, \
         f"decode budget {budget} smaller than the prefill ({seq_len}): " \
         "full-attention positions would be silently dropped"
     out = {k: v for k, v in cache.items() if k != "groups"}
     groups = []
-    for gi, (pattern, count) in enumerate(cfg.groups):
+    for gi, (kinds, count) in enumerate(M.cache_layout(cfg)):
         pos_caches = []
-        for pi, (mixer, _) in enumerate(pattern):
+        for pi, kind in enumerate(kinds):
             c = cache["groups"][gi][pi]
-            if isinstance(c, KVCache):
-                kind = "full" if mixer == "self_cross" else mixer
+            if kind in M.KV_KINDS and isinstance(c, KVCache):
                 W = cfg.cache_len(kind, budget)
                 S = c.k.shape[-2]
                 if W < S:  # ring buffer narrower than the prefill

@@ -12,12 +12,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.dist.sharding import ShardCtx
 from repro.models import model as M
 from repro.models.model import ModelConfig
-from repro.serve.engine import Request, SlotScheduler, ServeEngine, Status
+from repro.serve.engine import (BatchedCacheManager, Request, SlotScheduler,
+                                ServeEngine, Status)
 from repro.serve.step import (align_prefill_cache, cache_slot_extract,
-                              cache_slot_insert, make_decode_step,
-                              make_prefill_step)
+                              cache_slot_insert, make_align_step,
+                              make_decode_step, make_prefill_step)
 
 KEY = jax.random.PRNGKey(5)
 
@@ -171,6 +173,90 @@ def test_cache_slot_insert_extract_roundtrip(cfg):
     # and insert was functional (input pytree not mutated)
     for a, b in zip(before, jax.tree.leaves(batched)):
         assert a is b
+
+
+def test_step_factories_cache_on_cfg_and_ctx():
+    """Rebuilding steps must never retrace: the factories cache on
+    (cfg, ctx) — including a non-None ShardCtx, which hashes by identity
+    — so repeated calls return the *same* jitted callable."""
+    cfg = DENSE
+    ctx = ShardCtx(mesh=None)
+    for make in (make_prefill_step, make_decode_step):
+        assert make(cfg) is make(cfg)
+        assert make(cfg, ctx) is make(cfg, ctx)      # the old retrace bug
+        assert make(cfg, ctx) is not make(cfg)
+        assert make(cfg, ShardCtx(mesh=None)) is not make(cfg, ctx)
+    assert make_align_step(cfg, 7, 16) is make_align_step(cfg, 7, 16)
+    # and the identical callable means the jit cache is shared: tracing a
+    # rebuilt step a second time must hit the first build's cache
+    probe_cfg = tiny_cfg(name="tiny-retrace")
+    params = M.init_params(probe_cfg, KEY)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    step = make_prefill_step(probe_cfg, ctx)
+    step(params, toks)
+    misses0 = step._cache_size()
+    rebuilt = make_prefill_step(probe_cfg, ctx)
+    rebuilt(params, toks)
+    assert rebuilt is step and rebuilt._cache_size() == misses0, \
+        "rebuilding the step retraced the jit"
+
+
+def test_align_rejects_zero_target_len():
+    """target_len=0 must be an error, not silently "no target" (the old
+    ``target_len or seq_len`` coercion)."""
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    prefill = make_prefill_step(cfg)
+    _, cache = prefill(params, jnp.zeros((1, 4), jnp.int32))
+    with pytest.raises(AssertionError, match="positive decode budget"):
+        align_prefill_cache(cfg, cache, 4, target_len=0)
+    # None still means "use the prefill length"
+    out = align_prefill_cache(cfg, cache, 4, target_len=None)
+    assert out["groups"][0][0].k.shape[-2] == 4
+
+
+REC = tiny_cfg(name="tiny-rec", family="hybrid",
+               pattern=(("rec", "dense"), ("full", "dense")),
+               lru_width=32, conv_kernel=4)
+SSM = tiny_cfg(name="tiny-ssm", family="ssm",
+               pattern=(("ssm", "dense"), ("swa", "dense")), window=8,
+               ssm_state=16, ssm_heads=4, ssm_head_dim=16, ssm_groups=1)
+CHUNKED = tiny_cfg(name="tiny-chunked", pattern=(("chunked", "dense"),),
+                   chunk=8)
+
+
+@pytest.mark.parametrize("cfg", [DENSE, SWA, CHUNKED, REC, SSM],
+                         ids=["full", "swa", "chunked", "rec-hybrid",
+                              "ssm-hybrid"])
+def test_cache_manager_insert_extract_roundtrip(cfg):
+    """``BatchedCacheManager.extract`` ("debugging / migration") against
+    ``insert`` for every cache kind — KV rings, rolling windows, chunked
+    rings, and ssm/rec state caches — before it becomes the basis of the
+    paged pool's page-table remaps."""
+    budget = 16
+    mgr = BatchedCacheManager(cfg, 3, budget)
+    one = M.cache_init(cfg, 1, budget)
+    # fill the batch=1 cache with recognizable non-zero leaves
+    c = [0]
+
+    def fill(a):
+        c[0] += 1
+        return (jnp.arange(a.size, dtype=jnp.float32)
+                .reshape(a.shape) * c[0]).astype(a.dtype)
+
+    one = jax.tree.map(fill, one)
+    mgr.insert(one, 2)
+    back = mgr.extract(2)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(one)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # untouched slots still carry the init state
+    init = M.cache_init(cfg, 1, budget)
+    for slot in (0, 1):
+        other = mgr.extract(slot)
+        for got, want in zip(jax.tree.leaves(other),
+                             jax.tree.leaves(init)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
 
 
 def test_sequence_lifecycle_stamps():
