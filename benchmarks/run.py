@@ -15,6 +15,10 @@ pretty-printed reports to stderr).
   E9 paged_vs_dense — paged KV pool vs dense per-slot rings: tokens/s +
                      resident KV bytes at equal traffic (→ BENCH_serve.json
                      "paged_vs_dense")
+  E10 prefix_sharing — N sequences over one shared system prompt: resident
+                     pages + prefill tokens with copy-on-write sharing vs
+                     the unshared paged baseline, streams bit-identical
+                     (→ BENCH_serve.json "prefix_sharing")
 
 The ``BENCH_*.json`` files are *snapshots* (overwritten per run); every
 perf bench additionally appends a ``{git_rev, timestamp}``-stamped row to
@@ -499,6 +503,116 @@ def bench_paged_vs_dense():
         "kv_bytes_ratio": out["kv_bytes_ratio"]})
 
 
+# ----------------------------------------------------------------- E10 -----
+
+def bench_prefix_sharing():
+    """Prefix sharing + copy-on-write vs the unshared paged pool.
+
+    N sequences arrive carrying the same system prompt (a 2-page prefix
+    at this page size) plus distinct user tails.  The same trace is
+    served twice by the paged engine — ``prefix_sharing=False`` (the
+    plain paged baseline) and ``True`` — with identical greedy decoding.
+    Sharing must keep the streams byte-identical (divergent sequences
+    copy-on-write before their first conflicting ring write); what
+    changes is the *resource* picture: the shared span is prefilled once
+    (prefill-token count is the FLOP proxy — every skipped token skips
+    its full forward pass) and its pages are resident once instead of
+    once per sequence (peak distinct pages held).  Results land under
+    the ``prefix_sharing`` key of BENCH_serve.json.
+    """
+    import jax
+    import numpy as np
+    from repro.models.model import ModelConfig, init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    # hybrid swa+full: the swa ring (window < budget) wraps back into the
+    # shared pages mid-decode, so the bench exercises copy-on-write, not
+    # just read sharing (a full-attention ring never wraps inside budget)
+    cfg = ModelConfig(name="bench-prefix", family="dense", num_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=256, dtype="float32",
+                      pattern=(("swa", "dense"), ("full", "dense")),
+                      window=16)
+    n_slots, budget, page_size = 4, 48, 4
+    n_seqs, sys_len = 8, 8                      # 2 shared pages
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    rng = np.random.default_rng(23)
+    system = [int(t) for t in rng.integers(0, cfg.vocab, sys_len)]
+    reqs = []
+    for i in range(n_seqs):
+        tail = [int(t) for t in rng.integers(0, cfg.vocab,
+                                             rng.integers(2, 7))]
+        reqs.append(Request(i, system + tail, int(rng.integers(6, 13)),
+                            arrival=int(i // 2)))
+
+    def serve(sharing):
+        eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget,
+                          paged=True, page_size=page_size,
+                          prefix_sharing=sharing)
+        pending = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+        i, peak_pages = 0, 0
+        while i < len(pending) or not eng.done:
+            if eng.tick > 10_000:
+                raise RuntimeError("serve trace did not converge")
+            while i < len(pending) and pending[i].arrival <= eng.tick:
+                eng.submit(pending[i])
+                i += 1
+            eng.step()
+            peak_pages = max(peak_pages,
+                             sum(eng.cache_mgr.pages_held().values()))
+        eng.finish()
+        streams = {s.rid: list(s.out_tokens) for s in eng.sequences}
+        return eng, streams, peak_pages
+
+    out = {"trace": {"n_requests": len(reqs), "n_slots": n_slots,
+                     "budget": budget, "page_size": page_size,
+                     "system_prompt_tokens": sys_len,
+                     "shared_pages_per_seq": sys_len // page_size},
+           "rows": []}
+    streams_by = {}
+    for name, sharing in [("unshared", False), ("shared", True)]:
+        serve(sharing)                          # warmup (jit compile)
+        t0 = time.perf_counter()
+        eng, streams, peak_pages = serve(sharing)
+        dt = time.perf_counter() - t0
+        toks = sum(len(s) for s in streams.values())
+        row = {"policy": name, "tokens": toks, "tok_s": toks / dt,
+               "prefill_tokens": eng.stats["prefill_tokens"],
+               "shared_tokens": eng.stats["shared_tokens"],
+               "prefix_hits": eng.stats["prefix_hits"],
+               "cow_copies": eng.stats["cow_copies"],
+               "peak_pages_held": peak_pages, "wall_s": dt}
+        out["rows"].append(row)
+        streams_by[name] = streams
+        print(f"# {name}: {toks} tokens, prefilled "
+              f"{eng.stats['prefill_tokens']} "
+              f"(shared {eng.stats['shared_tokens']}), peak pages "
+              f"{peak_pages}, {eng.stats['cow_copies']} CoW copies",
+              file=sys.stderr)
+        _emit(f"prefix_sharing_{name}", dt * 1e6,
+              f"prefill_toks={eng.stats['prefill_tokens']};"
+              f"peak_pages={peak_pages}")
+    base, shared = out["rows"]
+    out["streams_match"] = streams_by["unshared"] == streams_by["shared"]
+    out["prefill_tokens_ratio"] = (base["prefill_tokens"] /
+                                   shared["prefill_tokens"])
+    out["peak_pages_ratio"] = (base["peak_pages_held"] /
+                               shared["peak_pages_held"])
+    print(f"# streams_match={out['streams_match']} prefill-token ratio "
+          f"{out['prefill_tokens_ratio']:.2f}x, peak-pages ratio "
+          f"{out['peak_pages_ratio']:.2f}x", file=sys.stderr)
+    assert out["streams_match"], "prefix sharing changed the streams!"
+    assert shared["peak_pages_held"] < base["peak_pages_held"], \
+        "sharing failed to reduce resident pages"
+    _merge_snapshot(ROOT / "BENCH_serve.json", {"prefix_sharing": out})
+    _history_append("prefix_sharing", {
+        "rows": out["rows"], "streams_match": out["streams_match"],
+        "prefill_tokens_ratio": out["prefill_tokens_ratio"],
+        "peak_pages_ratio": out["peak_pages_ratio"]})
+
+
 BENCHES = {
     "loc_compare": bench_loc_compare,
     "overhead": bench_overhead,
@@ -509,6 +623,7 @@ BENCHES = {
     "decode_throughput": bench_decode_throughput,
     "serve_throughput": bench_serve_throughput,
     "paged_vs_dense": bench_paged_vs_dense,
+    "prefix_sharing": bench_prefix_sharing,
 }
 
 

@@ -47,6 +47,11 @@ def main() -> int:
                     help="arena pages per cache kind (default: dense-"
                          "equivalent full provision; smaller values "
                          "oversubscribe and exercise preemption)")
+    ap.add_argument("--system-prompt", type=int, default=0, metavar="N",
+                    help="prepend one shared N-token system prompt to "
+                         "every request (paged mode: full pages of it "
+                         "are served from shared physical pages with "
+                         "copy-on-write)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -56,7 +61,10 @@ def main() -> int:
 
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(rng.poisson(args.mean_gap, size=args.requests))
+    system = [int(t) for t in rng.integers(0, cfg.vocab,
+                                           args.system_prompt)]
     reqs = [Request(i,
+                    system +
                     [int(t) for t in rng.integers(0, cfg.vocab,
                                                   rng.integers(8, 25))],
                     int(rng.integers(6, 21)), arrival=int(a))
@@ -85,6 +93,10 @@ def main() -> int:
         print(f"paged pool: {st['preemptions']} preemptions, "
               f"{st['swap_ins']} swap-ins, resident KV "
               f"{eng.cache_mgr.resident_bytes():,} bytes")
+        print(f"prefix sharing: {st['prefix_hits']} hits, "
+              f"{st['shared_tokens']} shared of "
+              f"{st['shared_tokens'] + st['prefill_tokens']} prompt "
+              f"tokens, {st['cow_copies']} CoW copies")
 
     prof.add_queue("Admit", eng.q_admit)
     prof.add_queue("Decode", eng.q_decode)

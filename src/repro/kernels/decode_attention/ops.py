@@ -45,8 +45,13 @@ def decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
     ((B, n_ptes) int32), the caches are the paged-pool arenas
     ((n_pages, Hkv, page_size, D) K/V, (n_pages, page_size) positions) and
     the step's ring write/read are routed through the table — see
-    ``ref.decode_attention_paged_ref``.  Returns
-    ``(out, new_k_cache, new_v_cache, new_pos_cache)``.
+    ``ref.decode_attention_paged_ref``.  Rows of the table may alias the
+    same physical page (prefix sharing): aliased *reads* are unchanged by
+    design — the gather is pure indirection — but the caller must
+    guarantee no two rows *write* the same physical page in one step, and
+    that a written page is referenced by exactly one row (the pool's
+    copy-on-write invariant: a page is writable iff its refcount is 1).
+    Returns ``(out, new_k_cache, new_v_cache, new_pos_cache)``.
     """
     if page_table is not None:
         return _decode_attention_paged(q, k_cache, v_cache, pos_cache,

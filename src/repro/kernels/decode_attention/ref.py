@@ -83,6 +83,15 @@ def decode_attention_paged_ref(
     the null page with stored position ``-1`` (invalid) and its output is
     garbage by construction.
 
+    Aliasing (prefix sharing): distinct rows may map the same physical
+    page — reads are a pure gather, so shared pages behave exactly as if
+    each row owned a private copy.  Writes are a scatter over ``ppage``:
+    two active rows whose write slots land in one physical page would
+    race (XLA scatter order is unspecified), so the serve pool
+    copies-on-write before a shared page (refcount > 1) is ever the
+    write target; only null-page writes may alias, and they are garbage
+    by contract.
+
     Returns (out, new_k_arena, new_v_arena, new_pos_arena).
     """
     B, Hq, T, D = q.shape

@@ -142,6 +142,41 @@ def self_attention(p, x, cfg, kind: str, positions,
             cache_pos = jnp.broadcast_to(
                 positions.astype(jnp.int32)[None, :], (B, T))
             new_cache = KVCache(k.astype(cdt), v.astype(cdt), cache_pos)
+    elif cfg.collect_kv:
+        # partial prefill (prefix sharing): extend a dense
+        # position-carrying *prefix* cache of length s — keys are the
+        # prefix K/V (bit-exact pages gathered back from the paged pool)
+        # concatenated with this call's fresh K/V, and the collected
+        # cache covers the full [0, s+T) span, so everything downstream
+        # (ring alignment, page donation) is oblivious to the split.
+        # Row-for-row this matches the one-shot prefill: each output row
+        # is the same masked reduction over the same s+T keys, merely
+        # computed with a shorter query block.
+        assert cache.pos is not None and cache.page_table is None, \
+            "partial prefill extends a dense position-carrying prefix"
+        assert positions.ndim == 1, \
+            "partial prefill takes contiguous scalar-offset positions"
+        kf = jnp.concatenate([cache.k.astype(k.dtype), k], axis=2)
+        vf = jnp.concatenate([cache.v.astype(v.dtype), v], axis=2)
+        kp = jnp.concatenate(
+            [cache.pos.astype(jnp.int32),
+             jnp.broadcast_to(positions.astype(jnp.int32)[None, :],
+                              (B, T))], axis=1)
+        if kf.shape[2] > 1024:
+            # mirror the one-shot prefill's flash threshold so a long
+            # shared prefill and its unshared twin take the same
+            # numerical path
+            assert B == 1, "partial prefill is batch=1 (admission)"
+            out = _xla_flash(q, kf, vf, causal=True, window=window,
+                             q_pos=positions, k_pos=kp[0],
+                             chunk=cfg.attn_chunk,
+                             unroll=cfg.analysis_unroll,
+                             qblocks=cfg.attn_qblocks)
+        else:
+            out = _xla_attention(q, kf, vf, causal=True, window=window,
+                                 q_pos=positions, k_pos=kp)
+        cdt = jnp.dtype(cfg.dtype)
+        new_cache = KVCache(kf.astype(cdt), vf.astype(cdt), kp)
     elif positions.ndim == 2:
         # decode, per-sequence positions (B, T): every sequence sits at its
         # own depth (continuous batching).  Ring writes are per-batch
@@ -175,14 +210,17 @@ def self_attention(p, x, cfg, kind: str, positions,
         else:
             widx = jnp.mod(pos, S) if (rolling or cache.pos is not None) \
                 else pos
+            # indices share one dtype (x64 would promote the literal 0s)
+            widx = jnp.asarray(widx, jnp.int32)
+            z = jnp.zeros((), jnp.int32)
             ck = jax.lax.dynamic_update_slice(
-                cache.k, k.astype(cache.k.dtype), (0, 0, widx, 0))
+                cache.k, k.astype(cache.k.dtype), (z, z, widx, z))
             cv = jax.lax.dynamic_update_slice(
-                cache.v, v.astype(cache.v.dtype), (0, 0, widx, 0))
+                cache.v, v.astype(cache.v.dtype), (z, z, widx, z))
             if cache.pos is not None:
                 cpos = jax.lax.dynamic_update_slice(
                     cache.pos, jnp.full((B, 1), pos, cache.pos.dtype),
-                    (0, widx))
+                    (z, widx))
                 new_cache = KVCache(ck, cv, cpos)
                 k_pos = cpos
             else:

@@ -322,17 +322,24 @@ def forward(cfg: ModelConfig, params, tokens, *,
     Decode: cache given, tokens (B,1), pos0 the absolute position — a
     scalar (lockstep batch: every sequence at the same depth) or a (B,)
     vector (continuous batching: per-sequence depths; -1 = inactive slot).
+    Partial prefill (prefix sharing): cache is a *prefix* cache under
+    ``cfg.collect_kv``, tokens (B, T>1) resume the prompt mid-sequence
+    and scalar pos0 is the resume offset — positions = pos0 + arange(T).
     """
     B, T = tokens.shape
     x = L.embed(params["embed"], tokens, cfg.embed_scale)
     if pos0 is None:
         positions = jnp.arange(T)
     else:
-        pos0 = jnp.asarray(pos0)
+        # int32 throughout: positions feed ring indices and the int32
+        # validity planes (and must not drift to int64 under x64)
+        pos0 = jnp.asarray(pos0, jnp.int32)
         if pos0.ndim == 0:
-            positions = jnp.broadcast_to(pos0, (T,))
+            # T == 1 decode this is the position itself; T > 1 is the
+            # partial-prefill resume: contiguous positions from pos0
+            positions = pos0 + jnp.arange(T, dtype=jnp.int32)
         else:       # per-sequence decode depths → (B, T) position plane
-            positions = pos0[:, None] + jnp.arange(T)[None, :]
+            positions = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
 
     ctx = None
     if cfg.has_cross:

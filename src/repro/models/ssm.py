@@ -104,6 +104,10 @@ def ssd_chunked(xs, dt, A, Bm, Cm, chunk: int,
     dt = dt.reshape(Bsz, nc, c, H).astype(jnp.float32)
     Bm = Bm.reshape(Bsz, nc, c, G, N).astype(jnp.float32)
     Cm = Cm.reshape(Bsz, nc, c, G, N).astype(jnp.float32)
+    # A rides the recurrence (da = dt·A feeds the scan carry): pin it to
+    # float32 like every other input, or an x64 caller's float64 A would
+    # promote the chunk decays and break the scan's carry dtype
+    A = jnp.asarray(A, jnp.float32)
     Bh = jnp.repeat(Bm, rep, axis=3)                     # (B, nc, c, H, N)
     Ch = jnp.repeat(Cm, rep, axis=3)
 
@@ -126,7 +130,7 @@ def ssd_chunked(xs, dt, A, Bm, Cm, chunk: int,
     # inter-chunk scan over chunk states
     chunk_decay = jnp.exp(jnp.sum(da, axis=2))           # (B, nc, H)
     h0 = jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None \
-        else init_state
+        else init_state.astype(jnp.float32)
 
     def scan_body(h, inp):
         s, dec = inp                                      # (B,H,P,N), (B,H)

@@ -9,12 +9,14 @@ Public surface::
 """
 
 from .cache_manager import BatchedCacheManager, PagedCacheManager
-from .engine import (INSERT_EVENT, PAGE_INSERT_EVENT, SCRUB_EVENT,
-                     SWAP_IN_EVENT, SWAP_OUT_EVENT, ServeEngine)
+from .engine import (COW_EVENT, INSERT_EVENT, PAGE_INSERT_EVENT,
+                     PREFIX_GATHER_EVENT, SCRUB_EVENT, SWAP_IN_EVENT,
+                     SWAP_OUT_EVENT, ServeEngine)
 from .request import Request, Sequence, Status
 from .scheduler import SlotScheduler
 
 __all__ = ["ServeEngine", "Request", "Sequence", "Status",
            "SlotScheduler", "BatchedCacheManager", "PagedCacheManager",
            "INSERT_EVENT", "PAGE_INSERT_EVENT", "SWAP_OUT_EVENT",
-           "SWAP_IN_EVENT", "SCRUB_EVENT"]
+           "SWAP_IN_EVENT", "SCRUB_EVENT", "PREFIX_GATHER_EVENT",
+           "COW_EVENT"]

@@ -21,7 +21,7 @@ of the ring and the pos plane wholesale).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +39,12 @@ extract_jit = jax.jit(cache_slot_extract)
 
 # paged-pool device ops, shared the same way (cfg is the static arg;
 # page ids and the slot index are traced, so every admission/retirement
-# of a given config reuses one compiled scatter/gather/scrub)
+# of a given config reuses one compiled scatter/gather/scrub/copy)
 paged_insert_jit = jax.jit(P.insert_pages, static_argnums=0)
 paged_extract_jit = jax.jit(P.extract_pages, static_argnums=0)
 paged_scrub_jit = jax.jit(P.scrub_pages, static_argnums=0)
+paged_gather_jit = jax.jit(P.gather_prefix, static_argnums=0)
+paged_copy_jit = jax.jit(P.copy_pages, static_argnums=0)
 
 
 class BatchedCacheManager:
@@ -69,20 +71,29 @@ class PagedCacheManager:
     """Block-granular cache manager over the paged KV pool.
 
     Owns the per-kind arenas (``paging.paged_cache_init``), the host-side
-    page tables, and a free-list :class:`~repro.serve.paging.PageAllocator`
-    per cache kind.  Slots cost nothing until pages are bound to them:
-    admission allocates exactly the pages the prompt fills, decode grows
-    a sequence one page at a time (``ensure_writable``), and retirement
-    returns pages to the free list after scrubbing their validity planes.
+    page tables, a refcounted :class:`~repro.serve.paging.PageAllocator`
+    per cache kind, and (with ``prefix_sharing``) a
+    :class:`~repro.serve.paging.PrefixIndex` per kind.  Slots cost
+    nothing until pages are bound to them: admission allocates exactly
+    the pages the prompt fills — mapping any already-resident shared
+    prefix by reference instead (``match_prefix``/``admit_pages``) —
+    decode grows a sequence one page at a time and copies-on-write off
+    shared pages (``prepare_write``), and retirement drops references,
+    returning a page to the free list only at refcount 0.
 
     ``pool_pages`` caps the allocatable pages of every kind (clamped to
     the dense-equivalent full provision ``n_slots · W/page_size``; at
     least one budget-length sequence must always fit).  The default
     (None) is full provision — paged layout with dense capacity.
+
+    Prefix sharing is disabled automatically for configs with state
+    caches (ssm / rec): a mid-prompt prefill restart would need the
+    prefix-final recurrent state, which pages do not carry.
     """
 
     def __init__(self, cfg: M.ModelConfig, n_slots: int, budget: int,
-                 page_size: int = 4, pool_pages: Optional[int] = None):
+                 page_size: int = 4, pool_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.cfg = cfg
         self.n_slots = n_slots
         self.budget = budget
@@ -108,9 +119,21 @@ class PagedCacheManager:
                       for kind, cap in arena.items()}
         self.tables = {kind: np.full((n_slots, n), P.PAGE_NULL, np.int32)
                        for kind, n in self.n_ptes.items()}
+        has_state = any(
+            kind in ("ssm", "rec")
+            for kinds, _ in M.cache_layout(cfg) for kind in kinds)
+        self.sharing = bool(prefix_sharing) and not has_state
+        self.prefix: Dict[str, P.PrefixIndex] = \
+            {kind: P.PrefixIndex(page_size) for kind in self.widths} \
+            if self.sharing else {}
         self.cache: Dict[str, Any] = P.paged_cache_init(
             cfg, n_slots, budget, page_size, arena)
         self._dirty = True
+        # table rows mutated since the last sync — the only rows the
+        # stale-entry validation needs to rescan (everything else was
+        # proven clean by an earlier sync)
+        self._touched: Dict[str, set] = \
+            {kind: set(range(n_slots)) for kind in self.widths}
 
     # -- page accounting -------------------------------------------------
     def used_ptes(self, kind: str, n_positions: int) -> int:
@@ -121,62 +144,175 @@ class PagedCacheManager:
             return self.n_ptes[kind]
         return math.ceil(max(n_positions, 0) / self.page_size)
 
-    def can_admit(self, n_positions: int) -> bool:
-        """True iff every kind has the pages a sequence with
-        ``n_positions`` already-written positions needs right now
-        (optimistic: later growth is served lazily, preempting if the
-        pool runs dry)."""
-        return all(self.alloc[kind].n_free >= self.used_ptes(kind,
-                                                             n_positions)
-                   for kind in self.widths)
+    def match_prefix(self, prompt) -> Tuple[int, Dict[str, List[int]]]:
+        """Longest resident shared prefix of ``prompt`` (full pages
+        only, uniform across kinds).  Returns
+        ``(shared_tokens, {kind: page-id run})`` — ``(0, {})`` when
+        sharing is off, when the prompt would wrap any kind's ring
+        (``L > W``: that ring cannot retain the prefix at its logical
+        front), or when nothing matches.  Capped at ``prompt_len - 1``
+        so admission always prefills at least the final token (the
+        first output token falls out of the prefill logits).  Pure —
+        admission re-matches per candidate, so pages registered by an
+        earlier admission in the same tick are already visible."""
+        L = len(prompt)
+        if not self.sharing or any(L > W for W in self.widths.values()):
+            return 0, {}
+        cap = (L - 1) // self.page_size
+        if cap <= 0:
+            return 0, {}
+        # the chain keys depend only on tokens and page size (uniform
+        # across kinds): hash once, bounded by cap, probe every index
+        keys = list(next(iter(self.prefix.values())).keys(prompt, cap))
+        runs = {kind: idx.match_keys(keys)
+                for kind, idx in self.prefix.items()}
+        m = min(len(r) for r in runs.values())
+        if m <= 0:
+            return 0, {}
+        return m * self.page_size, {kind: r[:m] for kind, r in runs.items()}
 
-    def admit_pages(self, slot: int, n_positions: int) -> bool:
+    def can_admit(self, n_positions: int, shared_pages: int = 0) -> bool:
+        """True iff every kind has the *fresh* pages a sequence with
+        ``n_positions`` already-written positions needs right now, the
+        first ``shared_pages`` of which are mapped by reference and cost
+        nothing (optimistic: later growth is served lazily, preempting
+        if the pool runs dry)."""
+        return all(
+            self.alloc[kind].n_free >=
+            self.used_ptes(kind, n_positions) - shared_pages
+            for kind in self.widths)
+
+    def admit_pages(self, slot: int, n_positions: int,
+                    shared: Optional[Dict[str, List[int]]] = None) -> bool:
         """Bind the pages for ``n_positions`` written positions to
-        ``slot`` (all kinds, all-or-nothing with rollback)."""
+        ``slot`` (all kinds, all-or-nothing with rollback).  With
+        ``shared`` (a ``match_prefix`` run), the run is mapped by
+        reference — refcount++ on already-resident pages — and only the
+        remainder is freshly allocated."""
+        shared = shared or {}
         granted: List = []
         for kind in self.widths:
-            ids = self.alloc[kind].alloc(self.used_ptes(kind, n_positions))
+            m = len(shared.get(kind, ()))
+            ids = self.alloc[kind].alloc(
+                self.used_ptes(kind, n_positions) - m)
             if ids is None:
                 for k, i in granted:
                     self.alloc[k].free(i)
                 return False
             granted.append((kind, ids))
         for kind, ids in granted:
+            pre = [int(p) for p in shared.get(kind, ())]
+            for p in pre:
+                self.alloc[kind].share(p)
             row = self.tables[kind][slot]
             row[:] = P.PAGE_NULL
-            row[:len(ids)] = ids
+            row[:len(pre)] = pre
+            row[len(pre):len(pre) + len(ids)] = ids
+            self._touched[kind].add(slot)
         self._dirty = True
         return True
 
-    def ensure_writable(self, slot: int, pos: int) -> bool:
-        """Make sure the ring slot position ``pos`` writes to is backed by
-        a real page in every kind, growing the sequence lazily.  False on
-        pool exhaustion (the engine preempts and retries)."""
-        need = []
+    def register_prefix(self, slot: int, prompt) -> None:
+        """Publish the slot's full-page prompt blocks in the prefix
+        index so later admissions with the same prefix map them by
+        reference.  Skips kinds whose ring wrapped during prefill
+        (``L > W``: the logical front no longer holds the prefix);
+        idempotent for pages that were themselves mapped from the
+        index."""
+        if not self.sharing:
+            return
+        L = len(prompt)
+        for kind, idx in self.prefix.items():
+            if L > self.widths[kind]:
+                continue
+            n_full = L // self.page_size
+            idx.register(prompt, self.tables[kind][slot][:n_full])
+
+    def prepare_write(self, slot: int, pos: int
+                      ) -> Optional[Dict[str, Tuple[List[int], List[int]]]]:
+        """Make the ring slot position ``pos`` writes to writable in
+        every kind: lazily allocate the backing page (growth), and when
+        the page is shared (refcount > 1) allocate a copy-on-write
+        target and swap the table entry.  Returns ``{kind: ([src],
+        [dst])}`` — the page copies the caller must run
+        (``paging.copy_pages``) *before* the decode step so the write
+        lands in a private copy (``{}`` when none are needed) — or None
+        on pool exhaustion with every partial grant rolled back (the
+        engine preempts and retries; preemption may itself drop a
+        refcount to 1 and obviate the copy).  An exclusive in-place
+        write (refcount == 1) deregisters the page from the prefix
+        index: its content is about to stop being the registered
+        prefix."""
+        grow: List[Tuple[str, int, int]] = []
+        cow: List[Tuple[str, int, int, int]] = []
+        inplace: List[Tuple[str, int]] = []
         for kind, W in self.widths.items():
             pte = (pos % W) // self.page_size
-            if self.tables[kind][slot, pte] == P.PAGE_NULL:
-                if self.alloc[kind].n_free < 1:
-                    return False
-                need.append((kind, pte))
-        for kind, pte in need:
-            (page,) = self.alloc[kind].alloc(1)
+            page = int(self.tables[kind][slot, pte])
+            if page == P.PAGE_NULL:
+                ids = self.alloc[kind].alloc(1)
+                if ids is None:
+                    self._rollback(grow, cow)
+                    return None
+                grow.append((kind, pte, ids[0]))
+            elif self.alloc[kind].refcount(page) > 1:
+                ids = self.alloc[kind].alloc(1)
+                if ids is None:
+                    self._rollback(grow, cow)
+                    return None
+                cow.append((kind, pte, page, ids[0]))
+            else:
+                inplace.append((kind, page))
+        for kind, pte, page in grow:
             self.tables[kind][slot, pte] = page
+            self._touched[kind].add(slot)
             self._dirty = True
-        return True
+        out: Dict[str, Tuple[List[int], List[int]]] = {}
+        for kind, pte, src, dst in cow:
+            self.tables[kind][slot, pte] = dst
+            freed = self.alloc[kind].free([src])
+            assert not freed, "CoW source was exclusively held"
+            out.setdefault(kind, ([], []))
+            out[kind][0].append(src)
+            out[kind][1].append(dst)
+            self._touched[kind].add(slot)
+            self._dirty = True
+        if self.sharing:
+            for kind, page in inplace:
+                self.prefix[kind].forget(page)
+        return out
+
+    def _rollback(self, grow, cow) -> None:
+        for kind, _, page in grow:
+            self.alloc[kind].free([page])
+        for kind, _, _, dst in cow:
+            self.alloc[kind].free([dst])
 
     def release_slot(self, slot: int) -> Dict[str, np.ndarray]:
-        """Free the slot's pages and null its table rows.  Returns the
-        pre-release rows — the page ids whose validity planes the caller
-        must scrub (``paging.scrub_pages``) before reuse."""
-        rows = {kind: self.tables[kind][slot].copy()
-                for kind in self.widths}
-        for kind, row in rows.items():
-            self.alloc[kind].free(int(p) for p in row
-                                  if p != P.PAGE_NULL)
+        """Drop the slot's page references and null its table rows.
+        Returns, per kind, the page ids that actually reached refcount
+        0 — padded to the row width with :data:`~repro.serve.paging.
+        PAGE_NULL` so the scrub program never retraces — the **only**
+        pages whose validity planes the caller may scrub
+        (``paging.scrub_pages``).  Pages another sequence still
+        references stay resident, registered, and untouched: a scrub of
+        a freed-but-shared page is impossible because release never
+        reports one."""
+        out: Dict[str, np.ndarray] = {}
+        for kind in self.widths:
+            row = self.tables[kind][slot]
+            freed = self.alloc[kind].free(
+                int(p) for p in row if p != P.PAGE_NULL)
+            if self.sharing:
+                for p in freed:
+                    self.prefix[kind].forget(p)
+            padded = np.full(self.n_ptes[kind], P.PAGE_NULL, np.int32)
+            padded[:len(freed)] = freed
+            out[kind] = padded
             self.tables[kind][slot] = P.PAGE_NULL
+            self._touched[kind].add(slot)
         self._dirty = True
-        return rows
+        return out
 
     def table_ids(self, slot: int) -> Dict[str, np.ndarray]:
         """Copy of the slot's current page-table rows (per kind)."""
@@ -186,11 +322,28 @@ class PagedCacheManager:
     # -- device side -----------------------------------------------------
     def sync(self) -> None:
         """Push the host tables into the cache pytree's ``page_table``
-        leaves (no-op when nothing changed since the last sync)."""
-        if self._dirty:
-            self.cache = P.with_page_tables(self.cfg, self.cache,
-                                            self.tables)
-            self._dirty = False
+        leaves (no-op when nothing changed since the last sync).  A
+        stale entry — a non-null table slot naming a page the allocator
+        no longer holds — raises before anything reaches the device:
+        decoding through it would read (or scrub-race) a freed page.
+        Only rows touched since the last sync are rescanned (earlier
+        syncs proved the rest clean), so the check stays O(mutations),
+        not O(table), on the per-tick path."""
+        if not self._dirty:
+            return
+        for kind, slots in self._touched.items():
+            table = self.tables[kind]
+            for s in slots:
+                for p in table[s]:
+                    if p != P.PAGE_NULL and \
+                            self.alloc[kind].refcount(p) == 0:
+                        raise AssertionError(
+                            f"stale page-table entry: {kind!r} page "
+                            f"{int(p)} (slot {s}) is not held by the "
+                            "allocator")
+            slots.clear()
+        self.cache = P.with_page_tables(self.cfg, self.cache, self.tables)
+        self._dirty = False
 
     def update(self, cache: Dict[str, Any]) -> None:
         """Adopt the cache pytree returned by a decode / insert / scrub
@@ -207,4 +360,5 @@ class PagedCacheManager:
 
 
 __all__ = ["BatchedCacheManager", "PagedCacheManager", "paged_insert_jit",
-           "paged_extract_jit", "paged_scrub_jit"]
+           "paged_extract_jit", "paged_scrub_jit", "paged_gather_jit",
+           "paged_copy_jit"]

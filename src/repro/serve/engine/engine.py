@@ -40,6 +40,20 @@ output stream is bit-identical to an uninterrupted run.  Swapped blocks
 stay device-resident (host offload is an open item) — preemption
 relieves *pool* pressure, which is the contended resource.
 
+**Prefix sharing** (``prefix_sharing=True``, paged mode only): identical
+prompt prefixes cost one set of physical pages for the whole fleet.
+Admission matches the prompt against the pool's
+:class:`~repro.serve.paging.PrefixIndex`; the matched full-page run is
+mapped by reference (refcount++), the prefill runs *partially* — from
+the first unshared token, attending over the gathered shared prefix
+(``PREFIX_GATHER`` + the same ``PREFILL_KERNEL`` event) — and the
+donation scatter skips the shared span (those blocks sink into the null
+page; the resident copies are already canonical).  Before any decode
+write lands in a shared page (refcount > 1) the engine copies-on-write
+(``PAGE_COW``): fresh page, jitted page copy, table-entry swap — so
+streams stay bit-identical to unshared runs while resident pages and
+prefill FLOPs drop with every shared prompt.
+
 Simplifications (documented, not accidental): greedy sampling unless a
 ``sample_fn`` is supplied; one prefill per admission (no prompt
 batching/bucketing — distinct prompt lengths retrace the prefill jit);
@@ -58,10 +72,13 @@ import numpy as np
 
 from ...core import Context, DispatchQueue
 from ...models import model as M
+from .. import paging as P
 from ..step import (ALIGN_EVENT, DECODE_EVENT, PREFILL_EVENT,
-                    make_align_step, make_decode_step, make_prefill_step)
+                    make_align_step, make_decode_step, make_prefill_ext_step,
+                    make_prefill_step)
 from .cache_manager import (BatchedCacheManager, PagedCacheManager,
-                            insert_jit, paged_extract_jit, paged_insert_jit,
+                            insert_jit, paged_copy_jit, paged_extract_jit,
+                            paged_gather_jit, paged_insert_jit,
                             paged_scrub_jit)
 from .request import Request, Sequence, Status
 from .scheduler import SlotScheduler
@@ -71,6 +88,8 @@ PAGE_INSERT_EVENT = "PAGE_INSERT"
 SWAP_OUT_EVENT = "SWAP_OUT"
 SWAP_IN_EVENT = "SWAP_IN"
 SCRUB_EVENT = "PAGE_SCRUB"
+PREFIX_GATHER_EVENT = "PREFIX_GATHER"
+COW_EVENT = "PAGE_COW"
 
 
 class ServeEngine:
@@ -79,14 +98,22 @@ class ServeEngine:
                  prefill_impl: Optional[str] = None,
                  sample_fn: Optional[Callable[[np.ndarray], np.ndarray]]
                  = None, paged: bool = False, page_size: int = 4,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         """``budget`` is the decode position budget: prompt length + new
         tokens of any request must fit in it.  ``prefill_impl`` overrides
         ``cfg.attn_impl`` for prefill only (e.g. decode on the fused
         Pallas kernel while prefill stays on XLA).  ``paged`` switches
         the standing cache to the paged KV pool; ``pool_pages`` caps the
         allocatable pages per cache kind (None = dense-equivalent full
-        provision), which is where the memory win comes from."""
+        provision), which is where the memory win comes from.
+        ``prefix_sharing`` (paged mode only) maps identical full-page
+        prompt prefixes onto already-resident pages with copy-on-write.
+        Partial prefill runs the XLA attention path only, so with an
+        effective pallas prefill sharing is disabled automatically —
+        mixing kernels between shared and unshared prefills would break
+        the bit-exactness contract silently; serve pallas decode with
+        ``prefill_impl="xla"`` to share prefixes."""
         assert not cfg.has_cross, \
             "serve engine does not support cross-attention models"
         self.cfg = cfg
@@ -97,7 +124,10 @@ class ServeEngine:
         self.page_size = page_size
         pcfg = cfg if prefill_impl is None else \
             dataclasses.replace(cfg, attn_impl=prefill_impl)
+        if pcfg.attn_impl == "pallas":
+            prefix_sharing = False
         self._prefill = make_prefill_step(pcfg)
+        self._prefill_ext = make_prefill_ext_step(pcfg)
         self._decode = make_decode_step(cfg)
         # greedy by default; sample_fn maps (B, V) logits → (B,) tokens
         self._sample = sample_fn or (lambda lg: np.argmax(lg, axis=-1))
@@ -106,7 +136,8 @@ class ServeEngine:
         if paged:
             self.cache_mgr = PagedCacheManager(cfg, n_slots, budget,
                                                page_size=page_size,
-                                               pool_pages=pool_pages)
+                                               pool_pages=pool_pages,
+                                               prefix_sharing=prefix_sharing)
         else:
             self.cache_mgr = BatchedCacheManager(cfg, n_slots, budget)
         ctx = context or Context.new_accel()
@@ -120,7 +151,9 @@ class ServeEngine:
         self.sequences: List[Sequence] = []
         self.tick = 0       # == ticks elapsed; steps/tokens in stats
         self.stats = {"decode_steps": 0, "decoded_tokens": 0,
-                      "prefills": 0, "preemptions": 0, "swap_ins": 0}
+                      "prefills": 0, "preemptions": 0, "swap_ins": 0,
+                      "prefill_tokens": 0, "shared_tokens": 0,
+                      "prefix_hits": 0, "cow_copies": 0}
 
     # -- client side -----------------------------------------------------
     def submit(self, request: Request) -> Sequence:
@@ -167,11 +200,33 @@ class ServeEngine:
             self._tokens[slot, 0] = first_tok
             self._pos[slot] = seq.pos
 
-    def _prefill_admit(self, seq: Sequence, slot: int) -> None:
-        prompt = jnp.asarray(seq.request.prompt, jnp.int32)[None, :]
-        logits, cache = self.q_admit.enqueue(
-            self._prefill, self.params, prompt,
-            name=PREFILL_EVENT, command_type=PREFILL_EVENT)
+    def _prefill_admit(self, seq: Sequence, slot: int,
+                       shared_toks: int = 0,
+                       shared_ids: Optional[Dict] = None) -> None:
+        tokens = seq.request.prompt
+        if shared_toks:
+            # prefix sharing: gather the resident shared span back into
+            # prefill layout and prefill only the unshared tail — both
+            # on the Admit lane, so the gather orders after the donor's
+            # own page inserts and the partial prefill after the gather
+            seq.shared_tokens = shared_toks
+            self.stats["prefix_hits"] += 1
+            self.stats["shared_tokens"] += shared_toks
+            prefix = self.q_admit.enqueue(
+                paged_gather_jit, self.cfg, self.cache_mgr.cache,
+                {k: jnp.asarray(v, jnp.int32)
+                 for k, v in shared_ids.items()},
+                name=PREFIX_GATHER_EVENT, command_type=PREFIX_GATHER_EVENT)
+            tail = jnp.asarray(tokens[shared_toks:], jnp.int32)[None, :]
+            logits, cache = self.q_admit.enqueue(
+                self._prefill_ext, self.params, tail, prefix,
+                name=PREFILL_EVENT, command_type=PREFILL_EVENT)
+        else:
+            prompt = jnp.asarray(tokens, jnp.int32)[None, :]
+            logits, cache = self.q_admit.enqueue(
+                self._prefill, self.params, prompt,
+                name=PREFILL_EVENT, command_type=PREFILL_EVENT)
+        self.stats["prefill_tokens"] += seq.prompt_len - shared_toks
         # relayout and slot packing are enqueued as *pure* jitted fns
         # whose outputs are the events' outputs — finish() fences
         # them and the spans track the copies, not host dispatch
@@ -181,9 +236,17 @@ class ServeEngine:
                                     page_size=self.page_size)
             blocks = self.q_admit.enqueue(align, cache, name=ALIGN_EVENT,
                                           command_type=ALIGN_EVENT)
+            ids = self.cache_mgr.table_ids(slot)
+            if shared_toks:
+                # donation skips the shared span: its blocks sink into
+                # the null page — the resident copies are already
+                # canonical and a scatter into them would be a write to
+                # refcount>1 pages
+                for kind in ids:
+                    ids[kind][:shared_toks // self.page_size] = P.PAGE_NULL
             packed = self.q_admit.enqueue(
                 paged_insert_jit, self.cfg, self.cache_mgr.cache, blocks,
-                self.cache_mgr.table_ids(slot), jnp.int32(slot),
+                ids, jnp.int32(slot),
                 name=PAGE_INSERT_EVENT, command_type=PAGE_INSERT_EVENT)
         else:
             align = make_align_step(self.cfg, seq.prompt_len,
@@ -194,6 +257,10 @@ class ServeEngine:
                 insert_jit, self.cache_mgr.cache, cache, jnp.int32(slot),
                 name=INSERT_EVENT, command_type=INSERT_EVENT)
         self.cache_mgr.update(packed)
+        if self.paged:
+            # publish this prompt's full-page blocks for later arrivals
+            # (host-side; the content lands via Admit-lane ordering)
+            self.cache_mgr.register_prefix(slot, tokens)
         self.stats["prefills"] += 1
         seq.pos = seq.prompt_len
         # first output token comes from the prefill logits
@@ -232,16 +299,27 @@ class ServeEngine:
             if head is None:
                 break
             resume = head.status is Status.PREEMPTED
-            need = head.pos if resume else head.prompt_len
-            if not self.cache_mgr.can_admit(need):
+            if resume:
+                # resumption restores swapped bits into fresh pages
+                # verbatim; it never re-attaches to shared prefixes
+                shared_toks, shared_ids = 0, {}
+                need = head.pos
+            else:
+                shared_toks, shared_ids = self.cache_mgr.match_prefix(
+                    head.request.prompt)
+                need = head.prompt_len
+            # the gate counts shared pages once: only the fresh
+            # remainder must be free
+            if not self.cache_mgr.can_admit(
+                    need, shared_pages=shared_toks // self.page_size):
                 break
             seq, slot = self.scheduler.pop_bind()
-            ok = self.cache_mgr.admit_pages(slot, need)
+            ok = self.cache_mgr.admit_pages(slot, need, shared=shared_ids)
             assert ok, "gate passed but allocation failed"
             if resume:
                 self._swap_in(seq, slot)
             else:
-                self._prefill_admit(seq, slot)
+                self._prefill_admit(seq, slot, shared_toks, shared_ids)
             admitted.append(seq)
         return admitted
 
@@ -271,13 +349,32 @@ class ServeEngine:
         return victim
 
     def _provision(self) -> None:
-        """Back every active slot's next ring write with a real page,
-        preempting the youngest sequence(s) on pool exhaustion."""
+        """Back every active slot's next ring write with a *writable*
+        page: lazy growth, copy-on-write off shared pages (refcount >
+        1), preempting the youngest sequence(s) on pool exhaustion.
+        CoW copies run on the Decode lane ahead of the decode step, so
+        the write always lands in the private copy."""
         for slot in sorted(self._slot_seq):
-            while slot in self._slot_seq and not \
-                    self.cache_mgr.ensure_writable(slot,
-                                                   int(self._pos[slot])):
-                self._preempt_one()
+            while slot in self._slot_seq:
+                plan = self.cache_mgr.prepare_write(slot,
+                                                    int(self._pos[slot]))
+                if plan is None:
+                    # pool dry: evict and re-plan (the eviction may have
+                    # dropped a refcount to 1, obviating a copy)
+                    self._preempt_one()
+                    continue
+                if plan:
+                    src = {k: jnp.asarray(v[0], jnp.int32)
+                           for k, v in plan.items()}
+                    dst = {k: jnp.asarray(v[1], jnp.int32)
+                           for k, v in plan.items()}
+                    cache = self.q_decode.enqueue(
+                        paged_copy_jit, self.cfg, self.cache_mgr.cache,
+                        src, dst, name=COW_EVENT, command_type=COW_EVENT)
+                    self.cache_mgr.update(cache)
+                    self.stats["cow_copies"] += sum(
+                        len(v[0]) for v in plan.values())
+                break
 
     def _decode_tick(self) -> List[Sequence]:
         if self.paged:
@@ -342,4 +439,5 @@ class ServeEngine:
 
 
 __all__ = ["ServeEngine", "INSERT_EVENT", "PAGE_INSERT_EVENT",
-           "SWAP_OUT_EVENT", "SWAP_IN_EVENT", "SCRUB_EVENT"]
+           "SWAP_OUT_EVENT", "SWAP_IN_EVENT", "SCRUB_EVENT",
+           "PREFIX_GATHER_EVENT", "COW_EVENT"]

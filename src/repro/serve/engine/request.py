@@ -65,6 +65,9 @@ class Sequence:
     swap: Optional[object] = None
     next_tok: int = -1
     preemptions: int = 0
+    # prompt tokens served from already-resident shared prefix pages
+    # (prefix sharing: their prefill was skipped; 0 = no sharing)
+    shared_tokens: int = 0
 
     @property
     def rid(self) -> int:

@@ -10,9 +10,10 @@ batch width).  The scheduler owns the slot ⇄ request binding:
   assignments);
 * **peek / pop_bind** expose admission one candidate at a time, so an
   engine can gate each admission on a second resource (the paged KV
-  pool admits on *pages free*, not just slots free) without the
-  scheduler knowing about pages; gating the head blocks the whole queue
-  (no skip-ahead — FIFO stays FIFO);
+  pool admits on *fresh pages free* — with prefix sharing the head's
+  prompt is first matched against resident pages and only the unshared
+  remainder is gated) without the scheduler knowing about pages; gating
+  the head blocks the whole queue (no skip-ahead — FIFO stays FIFO);
 * **requeue_front** puts a preempted sequence back at the *head* of the
   wait queue: a sequence evicted to relieve pool pressure resumes
   before any fresh request is admitted;

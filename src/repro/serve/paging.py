@@ -31,16 +31,31 @@ allocated page needs no cleaning before its first write.
 
 :class:`PageAllocator` is the deliberately host-side free list (lowest
 page id first — deterministic, like the slot scheduler); all device work
-(page scatter/gather/scrub) lives in the jit-able tree functions below,
-which walk the cache pytree by ``model.cache_layout``.  State caches
-(ssm / rec) are O(1) per slot and stay dense batch-indexed; the insert /
-extract helpers move them by batch slot exactly like the dense engine.
+(page scatter/gather/scrub/copy) lives in the jit-able tree functions
+below, which walk the cache pytree by ``model.cache_layout``.  State
+caches (ssm / rec) are O(1) per slot and stay dense batch-indexed; the
+insert / extract helpers move them by batch slot exactly like the dense
+engine.
+
+**Prefix sharing** (DESIGN.md "Prefix sharing & copy-on-write"): the
+allocator carries a per-page **refcount** so one physical page can back
+several sequences' page-table entries (``share``/``release``; a page
+returns to the free list only at refcount 0), and :class:`PrefixIndex`
+maps chain-hashed *full-page* token prefixes to the physical pages that
+hold their prefill K/V, so admission can map identical prompt prefixes
+by reference instead of recomputing them.  The writability invariant is
+
+> **a physical page is writable iff its refcount is 1** —
+
+decode detects a pending ring write into a shared page and
+copies-on-write first (:func:`copy_pages`).
 """
 
 from __future__ import annotations
 
+import hashlib
 import heapq
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,21 +70,28 @@ PAGE_NULL = 0
 
 
 class PageAllocator:
-    """Free-list allocator over the physical pages of one arena.
+    """Refcounted free-list allocator over the physical pages of one
+    arena.
 
     Page ids ``[n_reserved, n_pages)`` are allocatable; ``0`` (and any
     further reserved prefix) never leaves the allocator.  Allocation is
-    lowest-id-first and all-or-nothing; double-free and foreign-page
-    frees are assertion errors.
+    lowest-id-first and all-or-nothing, granting each page at refcount
+    1; :meth:`share` lets another page-table row reference the same
+    physical page (prefix sharing), and :meth:`free`/:meth:`release`
+    drop one reference per page — a page rejoins the free list **only
+    at refcount 0**.  Double-free / foreign-page frees raise, and so
+    does asking for more pages than the arena could ever grant (a
+    caller bug, unlike transient pool pressure, which returns None).
     """
 
     def __init__(self, n_pages: int, n_reserved: int = 1):
         assert n_pages > n_reserved >= 1, (n_pages, n_reserved)
         self.n_pages = n_pages
         self.n_reserved = n_reserved
+        self.capacity = n_pages - n_reserved
         self._free: List[int] = list(range(n_reserved, n_pages))
         heapq.heapify(self._free)
-        self._held: Set[int] = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
@@ -77,26 +99,146 @@ class PageAllocator:
 
     @property
     def n_held(self) -> int:
-        return len(self._held)
+        """Distinct pages with refcount ≥ 1 — a page shared by N
+        sequences counts once (physical-occupancy accounting)."""
+        return len(self._refs)
+
+    def refcount(self, page) -> int:
+        """References held on ``page`` (0 = free / never allocated)."""
+        return self._refs.get(int(page), 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """``n`` pages (lowest ids first), or None if fewer are free —
-        never a partial grant."""
-        assert n >= 0
+        """``n`` pages (lowest ids first) at refcount 1 each, or None if
+        fewer are free — never a partial grant.  ``n`` beyond the arena
+        capacity raises: no amount of freeing could satisfy it."""
+        assert n >= 0, n
+        if n > self.capacity:
+            raise ValueError(
+                f"requested {n} pages from a {self.capacity}-page arena "
+                "— the grant could never succeed")
         if n > len(self._free):
             return None
         out = [heapq.heappop(self._free) for _ in range(n)]
-        self._held.update(out)
+        for p in out:
+            self._refs[p] = 1
         return out
 
-    def free(self, pages) -> None:
+    def share(self, page) -> None:
+        """Add a reference to an already-held page (prefix sharing: a
+        second page-table row maps the same physical page)."""
+        page = int(page)
+        if page not in self._refs:
+            raise AssertionError(f"page {page} is not held, cannot share")
+        self._refs[page] += 1
+
+    def free(self, pages) -> List[int]:
+        """Drop one reference per page; returns the pages that reached
+        refcount 0 (now back in the free list) — the only pages whose
+        validity planes the caller may scrub.  Pages other sequences
+        still reference stay held and are *not* returned."""
+        freed: List[int] = []
         for p in pages:
             p = int(p)
             if p == PAGE_NULL:          # null entries ride along in rows
                 continue
-            assert p in self._held, f"page {p} double-freed or foreign"
-            self._held.discard(p)
-            heapq.heappush(self._free, p)
+            refs = self._refs.get(p, 0)
+            if refs == 0:
+                raise AssertionError(f"page {p} double-freed or foreign")
+            if refs == 1:
+                del self._refs[p]
+                heapq.heappush(self._free, p)
+                freed.append(p)
+            else:
+                self._refs[p] = refs - 1
+        return freed
+
+    def release(self, page) -> bool:
+        """Drop one reference on a single page; True iff it was freed
+        (refcount reached 0)."""
+        return bool(self.free([int(page)]))
+
+
+class PrefixIndex:
+    """Chain-hashed token-prefix → physical-page index (full pages only).
+
+    The key of logical page ``t`` is ``H(key[t-1] ‖ tokens[t·ps:(t+1)·ps])``
+    — it commits to the *entire* prefix behind the page, not just the
+    page's own tokens — so :meth:`match` walks page keys from ``t = 0``
+    and stops at the first miss, returning the longest registered
+    full-page prefix run.  Host-side and tiny, like the allocator.
+
+    Content contract: a registered page still holds the bit-exact
+    prefill K/V of its token prefix.  The pool maintains it by
+    deregistering a page on every in-place write (a page is writable
+    iff refcount == 1) and when the page returns to the free list;
+    copy-on-write *sources* stay registered — they keep their pristine
+    prefix content for the remaining sharers.
+    """
+
+    def __init__(self, page_size: int):
+        assert page_size >= 1
+        self.page_size = page_size
+        self._page_of: Dict[bytes, int] = {}    # chain key → physical page
+        self._key_of: Dict[int, bytes] = {}     # reverse, for forget()
+
+    def __len__(self) -> int:
+        return len(self._page_of)
+
+    def __contains__(self, page) -> bool:
+        return int(page) in self._key_of
+
+    def keys(self, tokens: Sequence[int], n_pages: Optional[int] = None):
+        """Chain keys of the first ``n_pages`` full pages of ``tokens``
+        — a *generator*, so a consumer that stops at the first miss
+        never hashes the rest of a long prompt, and a caller probing
+        several same-page-size indexes can materialize the chain once
+        and share it (the keys depend only on tokens and page size)."""
+        ps = self.page_size
+        if n_pages is None:
+            n_pages = len(tokens) // ps
+        h = b""
+        for t in range(n_pages):
+            blk = np.asarray(tokens[t * ps:(t + 1) * ps], np.int64)
+            h = hashlib.blake2b(h + blk.tobytes(),
+                                digest_size=16).digest()
+            yield h
+
+    def match_keys(self, keys) -> List[int]:
+        """Pages registered under a (possibly lazy) chain-key run,
+        stopping at the first miss."""
+        out: List[int] = []
+        for key in keys:
+            page = self._page_of.get(key)
+            if page is None:
+                break
+            out.append(page)
+        return out
+
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Physical pages holding the longest registered full-page
+        prefix of ``tokens`` (possibly empty)."""
+        return self.match_keys(self.keys(tokens))
+
+    def register(self, tokens: Sequence[int], pages: Sequence[int]) -> None:
+        """Publish ``pages[t]`` as holding full-page prefix block ``t``
+        of ``tokens``.  Idempotent: blocks whose key is already present
+        (the shared pages a matching admission mapped by reference) are
+        skipped, as is a page already registered under another key."""
+        for key, page in zip(self.keys(tokens, len(pages)), pages):
+            page = int(page)
+            assert page != PAGE_NULL, "cannot register the null page"
+            if key in self._page_of or page in self._key_of:
+                continue
+            self._page_of[key] = page
+            self._key_of[page] = key
+
+    def forget(self, page) -> None:
+        """Drop ``page``'s registration (no-op if unregistered): called
+        before an in-place write changes its content and when the page
+        is freed."""
+        key = self._key_of.pop(int(page), None)
+        if key is not None:
+            del self._page_of[key]
 
 
 # ------------------------------------------------------------ structure ----
@@ -224,10 +366,12 @@ def insert_pages(cfg: M.ModelConfig, cache: Dict, blocks: Dict,
                        c.page_table)
 
     def ins_state(kind, c, blk):
+        s32 = jnp.asarray(slot, jnp.int32)
+        z = jnp.zeros((), jnp.int32)
         return jax.tree.map(
             lambda d, s: jax.lax.dynamic_update_slice(
                 d, s.astype(d.dtype),
-                (0, slot) + (0,) * (d.ndim - 2)),
+                (z, s32) + (z,) * (d.ndim - 2)),
             c, blk)
 
     return _walk(cfg, cache, ins, ins_state, blocks=blocks)
@@ -244,11 +388,14 @@ def extract_pages(cfg: M.ModelConfig, cache: Dict, ids: Dict[str, Any],
         return KVCache(c.k[:, i], c.v[:, i], c.pos[:, i])
 
     def ext_state(kind, c, _blk):
+        s32 = jnp.asarray(slot, jnp.int32)
+        z = jnp.zeros((), jnp.int32)
+
         def take(a):
             sizes = list(a.shape)
             sizes[1] = 1
             return jax.lax.dynamic_slice(
-                a, (0, slot) + (0,) * (a.ndim - 2), tuple(sizes))
+                a, (z, s32) + (z,) * (a.ndim - 2), tuple(sizes))
 
         return jax.tree.map(take, c)
 
@@ -266,6 +413,54 @@ def scrub_pages(cfg: M.ModelConfig, cache: Dict,
         return KVCache(c.k, c.v, c.pos.at[:, i].set(-1), c.page_table)
 
     return _walk(cfg, cache, scrub)
+
+
+def gather_prefix(cfg: M.ModelConfig, cache: Dict,
+                  ids: Dict[str, Any]) -> Dict:
+    """Gather a shared full-page prefix out of the arenas back into the
+    prefill (``collect_kv``) layout (jit-able).
+
+    ``ids[kind]`` is the ``(m,)`` run of physical pages holding prefix
+    positions ``[0, m·page_size)`` in logical order; every KV leaf
+    ``(count, n_pages, Hkv, ps, D)`` yields a batch=1 prefix cache leaf
+    ``(count, 1, Hkv, m·ps, D)`` with its ``(count, 1, m·ps)`` position
+    plane — exactly what partial prefill
+    (``serve.step.make_prefill_ext_step``) extends.  Enqueued on the
+    Admit lane so it orders after the donor's own page inserts."""
+    def ext(kind: str, c: KVCache, _blk) -> KVCache:
+        i = jnp.asarray(ids[kind], jnp.int32)
+        count, _, Hkv, ps, D = c.k.shape
+
+        def pick(a):        # (count, n_pages, Hkv, ps, D) → prefill layout
+            return a[:, i].transpose(0, 2, 1, 3, 4).reshape(
+                count, Hkv, -1, D)[:, None]
+
+        return KVCache(pick(c.k), pick(c.v),
+                       c.pos[:, i].reshape(count, -1)[:, None])
+
+    return _walk(cfg, cache, ext)
+
+
+def copy_pages(cfg: M.ModelConfig, cache: Dict, src: Dict[str, Any],
+               dst: Dict[str, Any]) -> Dict:
+    """Copy physical pages ``src[kind][i] → dst[kind][i]`` — K, V and the
+    validity plane, every layer of the kind — before a ring write lands
+    in a page another sequence still references (copy-on-write; the
+    writer's table entry is swapped to ``dst`` by the cache manager and
+    the source keeps its pristine content for the remaining sharers).
+    Kinds absent from ``src`` pass through untouched (jit-able; page ids
+    may be traced)."""
+    def cp(kind: str, c: KVCache, _blk) -> KVCache:
+        if kind not in src:
+            return c
+        s = jnp.asarray(src[kind], jnp.int32)
+        d = jnp.asarray(dst[kind], jnp.int32)
+        return KVCache(c.k.at[:, d].set(c.k[:, s]),
+                       c.v.at[:, d].set(c.v[:, s]),
+                       c.pos.at[:, d].set(c.pos[:, s]),
+                       c.page_table)
+
+    return _walk(cfg, cache, cp)
 
 
 def with_page_tables(cfg: M.ModelConfig, cache: Dict,
@@ -293,6 +488,7 @@ def kv_resident_bytes(cache: Dict) -> int:
     return total
 
 
-__all__ = ["PAGE_NULL", "PageAllocator", "kv_widths", "paged_cache_init",
-           "ring_to_page_blocks", "insert_pages", "extract_pages",
-           "scrub_pages", "with_page_tables", "kv_resident_bytes"]
+__all__ = ["PAGE_NULL", "PageAllocator", "PrefixIndex", "kv_widths",
+           "paged_cache_init", "ring_to_page_blocks", "insert_pages",
+           "extract_pages", "scrub_pages", "gather_prefix", "copy_pages",
+           "with_page_tables", "kv_resident_bytes"]

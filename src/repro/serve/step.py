@@ -64,8 +64,36 @@ def _build_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
     return jax.jit(decode_step)
 
 
+def _prefix_len(cfg: M.ModelConfig, prefix_cache: Dict) -> int:
+    """Static prefix length of a collect_kv-layout cache: the ring axis
+    of its first attention leaf (all kinds carry the same full-page
+    prefix span)."""
+    for gi, (kinds, _) in enumerate(M.cache_layout(cfg)):
+        for pi, kind in enumerate(kinds):
+            if kind in M.KV_KINDS:
+                return prefix_cache["groups"][gi][pi].k.shape[-2]
+    raise AssertionError("prefix cache has no attention leaves")
+
+
+def _build_prefill_ext_step(cfg: M.ModelConfig,
+                            ctx: Optional[ShardCtx] = None):
+    pcfg = dataclasses.replace(cfg, collect_kv=True)
+
+    def prefill_ext_step(params, tokens, prefix_cache):
+        s = _prefix_len(pcfg, prefix_cache)
+        with use_ctx(ctx):
+            hidden, cache, _ = M.forward(pcfg, params, tokens,
+                                         cache=prefix_cache,
+                                         pos0=jnp.int32(s))
+            logits = M.logits_fn(pcfg, params, hidden[:, -1:])
+        return logits, cache
+
+    return jax.jit(prefill_ext_step)
+
+
 _cached_prefill = functools.cache(_build_prefill_step)
 _cached_decode = functools.cache(_build_decode_step)
+_cached_prefill_ext = functools.cache(_build_prefill_ext_step)
 
 
 def make_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
@@ -81,6 +109,23 @@ def make_decode_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
     """Jitted decode step; cached on ``(cfg, ctx)`` (see
     :func:`make_prefill_step`)."""
     return _cached_decode(cfg, ctx)
+
+
+def make_prefill_ext_step(cfg: M.ModelConfig,
+                          ctx: Optional[ShardCtx] = None):
+    """Jitted *partial* prefill: ``(params, tokens, prefix_cache) →
+    (last-token logits, full-span collected cache)``.
+
+    ``prefix_cache`` is a batch=1 collect_kv-layout cache of the first
+    ``s`` prompt positions (prefix sharing gathers it straight from the
+    paged pool's shared pages); ``tokens`` are the remaining prompt
+    ``[s:]``, consumed at positions ``s..L-1`` while attending over
+    prefix + fresh keys.  The returned cache covers the whole ``[0, L)``
+    span, so ring alignment and page donation are identical to the
+    one-shot prefill.  Cached on ``(cfg, ctx)``; distinct ``(s, L-s)``
+    shapes retrace, like distinct prompt lengths do (documented engine
+    simplification)."""
+    return _cached_prefill_ext(cfg, ctx)
 
 
 def _build_align_step(cfg: M.ModelConfig, seq_len: int,
@@ -183,7 +228,10 @@ def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
 
 
 def _slot_index(leaf_ndim: int, slot, axis: int):
-    idx = [0] * leaf_ndim
+    # every index shares the slot's dtype (mixed int32/int64 indices are
+    # a dynamic_slice error once x64 promotes the literal 0s)
+    slot = jnp.asarray(slot, jnp.int32)
+    idx = [jnp.zeros((), jnp.int32)] * leaf_ndim
     idx[axis] = slot
     return tuple(idx)
 
@@ -225,6 +273,7 @@ def cache_slot_extract(batched: Dict, slot) -> Dict:
     return out
 
 
-__all__ = ["make_prefill_step", "make_decode_step", "make_align_step",
-           "align_prefill_cache", "cache_slot_insert", "cache_slot_extract",
-           "PREFILL_EVENT", "DECODE_EVENT", "ALIGN_EVENT"]
+__all__ = ["make_prefill_step", "make_decode_step", "make_prefill_ext_step",
+           "make_align_step", "align_prefill_cache", "cache_slot_insert",
+           "cache_slot_extract", "PREFILL_EVENT", "DECODE_EVENT",
+           "ALIGN_EVENT"]

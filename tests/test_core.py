@@ -142,7 +142,7 @@ class TestProgramKernel:
         assert an.flops > 2 * 128**3 * 0.9
         assert an.collectives.total_bytes == 0
         k = prog.get_kernel()
-        out = k(jnp.eye(128))
+        out = k(jnp.eye(128, dtype=jnp.float32))  # x64-safe: matches the lowered f32 signature
         assert float(out) == 128.0
 
     def test_build_log_on_failure(self):

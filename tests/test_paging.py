@@ -34,17 +34,20 @@ KEY = jax.random.PRNGKey(11)
        st.integers(0, 2 ** 31))
 def test_allocator_roundtrip(n_pages, sizes, seed):
     """Random alloc/free interleavings: grants are disjoint, never include
-    the null page, exhaustion is all-or-nothing, and every page freed
-    returns to circulation (conservation)."""
+    the null page, exhaustion is all-or-nothing (and beyond-capacity asks
+    raise), and every page freed returns to circulation (conservation)."""
     rng = np.random.default_rng(seed)
     alloc = P.PageAllocator(n_pages)
     capacity = n_pages - 1
     held = []
     for n in sizes:
-        got = alloc.alloc(n)
-        if n > capacity - sum(len(h) for h in held):
-            assert got is None          # all-or-nothing on exhaustion
+        if n > capacity:                # could never be granted: caller bug
+            with pytest.raises(ValueError):
+                alloc.alloc(n)
+        elif n > capacity - sum(len(h) for h in held):
+            assert alloc.alloc(n) is None   # all-or-nothing on exhaustion
         else:
+            got = alloc.alloc(n)
             assert got is not None and len(got) == n
             assert P.PAGE_NULL not in got
             flat = [p for h in held for p in h]
@@ -69,6 +72,42 @@ def test_allocator_double_free_is_error():
         alloc.free([got[0]])
     with pytest.raises(AssertionError):
         alloc.free([99])                # foreign page
+
+
+def test_allocator_negative_paths_leave_free_list_intact():
+    """Freeing an unallocated page, asking beyond the arena capacity, and
+    a stale table sync must raise without corrupting the free list."""
+    alloc = P.PageAllocator(5)          # capacity 4
+    before = alloc.n_free
+    with pytest.raises(AssertionError):
+        alloc.free([2])                 # never allocated
+    with pytest.raises(ValueError):
+        alloc.alloc(5)                  # beyond capacity: can never succeed
+    assert alloc.n_free == before and alloc.n_held == 0
+    got = alloc.alloc(4)                # the full arena still grants
+    assert got == [1, 2, 3, 4]
+    assert alloc.alloc(1) is None       # transient exhaustion stays None
+    alloc.free(got)
+    assert alloc.n_free == before
+
+
+def test_table_sync_with_stale_entry_raises():
+    """A page-table entry naming a page the allocator no longer holds
+    must fail sync before it reaches the device (decode through it would
+    read a freed page)."""
+    mgr = PagedCacheManager(DENSE, 2, 16, page_size=4)
+    assert mgr.admit_pages(0, 7)
+    mgr.sync()                          # healthy tables sync fine
+    (page,) = mgr.alloc["full"].alloc(1)
+    mgr.alloc["full"].free([page])      # allocated then freed: stale
+    mgr.tables["full"][1, 0] = page     # simulate a buggy row mutation
+    mgr._touched["full"].add(1)         # (mutation helpers record these)
+    mgr._dirty = True
+    with pytest.raises(AssertionError, match="stale page-table entry"):
+        mgr.sync()
+    # undo the poke: the manager must still be usable
+    mgr.tables["full"][1, 0] = P.PAGE_NULL
+    mgr.sync()
 
 
 # ------------------------------------------- paged op vs dense oracle ------

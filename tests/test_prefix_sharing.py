@@ -1,0 +1,375 @@
+"""Prefix sharing + copy-on-write over the paged KV pool.
+
+The conformance contract: identical prompt prefixes are served from one
+set of physical pages (refcounts in ``PageAllocator``, chain-hashed
+full-page lookup in ``PrefixIndex``, partial prefill from the first
+unshared token), sequences that diverge copy-on-write before the first
+conflicting ring write, and **every stream is bit-identical to the
+unshared run** — under plain serving, retire-while-shared, and
+preemption — for both the xla and pallas-interpret decode paths.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import model as M
+from repro.models.model import ModelConfig
+from repro.serve import paging as P
+from repro.serve.engine import PagedCacheManager, Request, ServeEngine
+from repro.serve.step import (align_prefill_cache, make_decode_step,
+                              make_prefill_ext_step, make_prefill_step)
+
+KEY = jax.random.PRNGKey(23)
+
+TINY = dict(name="tiny-prefix", family="dense", num_layers=2, d_model=32,
+            n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=128,
+            dtype="float32")
+DENSE = ModelConfig(**TINY)
+# window ≥ the shared prompts (sharing requires L ≤ W for every kind) but
+# < the budget, so decode wraps the swa ring into shared pages → CoW
+HYBRID = ModelConfig(**{**TINY, "pattern": (("swa", "dense"),
+                                            ("full", "dense")),
+                        "window": 16})
+
+
+# -------------------------------------------- refcounted PageAllocator -----
+
+@settings(max_examples=40)
+@given(st.integers(3, 16),
+       st.lists(st.integers(0, 4), min_size=4, max_size=30),
+       st.integers(0, 2 ** 31))
+def test_allocator_share_release_properties(n_pages, sizes, seed):
+    """Random alloc/share/release interleavings against a reference
+    refcount model: a page returns to the free list exactly when its
+    refcount reaches 0, grants never overlap held pages, ``n_held``
+    counts distinct pages (shared pages once), and accounting always
+    conserves ``n_free + n_held == capacity``."""
+    rng = np.random.default_rng(seed)
+    alloc = P.PageAllocator(n_pages)
+    capacity = n_pages - 1
+    model = {}                                  # page → refcount oracle
+    for n in sizes:
+        if n <= alloc.n_free:
+            got = alloc.alloc(n)
+            assert got is not None and len(got) == n
+            assert not set(got) & set(model), "granted a held page"
+            for p in got:
+                model[p] = 1
+        elif n <= capacity:
+            assert alloc.alloc(n) is None       # transient pressure
+        if model and rng.integers(0, 2):        # share a random held page
+            p = int(rng.choice(list(model)))
+            alloc.share(p)
+            model[p] += 1
+        if model and rng.integers(0, 2):        # release a random ref
+            p = int(rng.choice(list(model)))
+            freed = alloc.free([p])
+            model[p] -= 1
+            if model[p] == 0:
+                assert freed == [p], "page must free exactly at refcount 0"
+                del model[p]
+            else:
+                assert freed == [], "freed a page others still reference"
+        for p, refs in model.items():
+            assert alloc.refcount(p) == refs
+        assert alloc.n_held == len(model)
+        assert alloc.n_free + alloc.n_held == capacity
+    while model:
+        p = next(iter(model))
+        for _ in range(model.pop(p)):
+            alloc.free([p])
+    assert alloc.n_free == capacity and alloc.n_held == 0
+
+
+def test_allocator_share_release_unit():
+    alloc = P.PageAllocator(6)
+    a, b = alloc.alloc(2)
+    alloc.share(a)                              # refcount 2
+    assert alloc.refcount(a) == 2 and alloc.refcount(b) == 1
+    assert alloc.n_held == 2                    # shared page counts once
+    assert alloc.free([a, b]) == [b]            # a survives its first free
+    assert alloc.refcount(a) == 1
+    assert alloc.release(a)                     # now it frees
+    assert alloc.refcount(a) == 0 and alloc.n_held == 0
+    with pytest.raises(AssertionError):
+        alloc.free([a])                         # double-free
+    with pytest.raises(AssertionError):
+        alloc.share(b)                          # share of a free page
+
+
+# --------------------------------------------------------- PrefixIndex -----
+
+def test_prefix_index_chain_match_and_forget():
+    idx = P.PrefixIndex(page_size=4)
+    toks = list(range(10, 22))                  # 3 full pages
+    idx.register(toks, [5, 7, 9])
+    assert idx.match(toks) == [5, 7, 9]
+    assert idx.match(toks + [99]) == [5, 7, 9]  # longer prompt, same run
+    assert idx.match(toks[:7]) == [5]           # one full page only
+    # a different first page breaks the chain immediately — the key of
+    # page t commits to the whole prefix behind it
+    assert idx.match([0] + toks[1:]) == []
+    assert idx.match(toks[:3]) == []            # no full page at all
+    # forgetting a middle page truncates every deeper match (the deeper
+    # registration survives — its content was never written — and
+    # rejoins the chain once the gap is re-registered)
+    idx.forget(7)
+    assert idx.match(toks) == [5]
+    assert 7 not in idx and 5 in idx and 9 in idx
+    idx.register(toks, [5, 11, 13])
+    assert idx.match(toks) == [5, 11, 9]
+    # register is idempotent: re-registering the same blocks under new
+    # pages must not displace the resident ones
+    idx.register(toks, [6, 12, 14])
+    assert idx.match(toks) == [5, 11, 9]
+
+
+# ------------------------------------- partial prefill ≡ full prefill ------
+
+@pytest.mark.parametrize("cfg", [DENSE, HYBRID], ids=["full", "swa+full"])
+def test_prefill_ext_matches_full_prefill(cfg):
+    """Resuming a prefill mid-prompt from a bit-exact prefix cache must
+    reproduce the one-shot prefill exactly: same last-token logits, same
+    collected cache bits — the property that makes shared-prefix streams
+    indistinguishable from unshared ones."""
+    params = M.init_params(cfg, KEY)
+    prefill = make_prefill_step(cfg)
+    prefill_ext = make_prefill_ext_step(cfg)
+    L, s = 11, 8
+    toks = jax.random.randint(KEY, (1, L), 0, cfg.vocab)
+    logits_full, cache_full = prefill(params, toks)
+
+    def cut(c):
+        if not isinstance(c, M.A.KVCache):
+            return c
+        return M.A.KVCache(c.k[..., :s, :], c.v[..., :s, :],
+                           c.pos[..., :s])
+
+    prefix = {"groups": [tuple(cut(c) for c in g)
+                         for g in cache_full["groups"]]}
+    logits_ext, cache_ext = prefill_ext(params, toks[:, s:], prefix)
+    np.testing.assert_array_equal(np.asarray(logits_ext),
+                                  np.asarray(logits_full))
+    for got, want in zip(jax.tree.leaves(cache_ext),
+                         jax.tree.leaves(cache_full)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------- engine oracles ------
+
+def lockstep_single(cfg, params, prompt, max_new, budget):
+    """The unshared single-request oracle (prefill → align → decode)."""
+    prefill = make_prefill_step(dataclasses.replace(cfg, attn_impl="xla"))
+    decode = make_decode_step(cfg)
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits, cache = prefill(params, toks)
+    cache = align_prefill_cache(cfg, cache, len(prompt), target_len=budget)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(out) < max_new:
+        logits, cache = decode(params, cache,
+                               jnp.asarray([[out[-1]]], jnp.int32),
+                               jnp.int32(pos))
+        out.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    return out
+
+
+def sys_prompt(n, seed=3):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(0, 128, n)]
+
+
+def check_streams(cfg, params, eng, reqs, budget):
+    streams = eng.run(reqs)
+    for r in reqs:
+        ref = lockstep_single(cfg, params, r.prompt, r.max_new_tokens,
+                              budget)
+        assert streams[r.rid] == ref, \
+            f"rid={r.rid}: {streams[r.rid]} != {ref}"
+    return streams
+
+
+# --------------------------------------------------- CoW divergence --------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_cow_divergence_streams_bit_identical(impl):
+    """Two sequences share a 2-page prefix, diverge, and decode far
+    enough to wrap the swa ring back into the shared pages: the first
+    conflicting write must copy-on-write, and both streams must equal
+    their unshared oracles bit-for-bit."""
+    cfg = dataclasses.replace(HYBRID, attn_impl=impl)
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(8)                          # 2 full pages at ps=4
+    reqs = [Request(0, pre + [5, 9], 13, arrival=0),
+            Request(1, pre + [7, 3], 13, arrival=0)]
+    eng = ServeEngine(cfg, params, n_slots=2, budget=24, paged=True,
+                      page_size=4, prefill_impl="xla")
+    check_streams(cfg, params, eng, reqs, 24)
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["shared_tokens"] == 8
+    assert eng.stats["cow_copies"] >= 1, \
+        "the trace was meant to wrap into a shared page"
+    # everything drained back into the pool
+    for kind, alloc in eng.cache_mgr.alloc.items():
+        assert alloc.n_held == 0, kind
+
+
+def test_sharing_auto_disabled_with_pallas_prefill():
+    """Partial prefill runs XLA attention only: an effective pallas
+    prefill must switch sharing off (mixed kernels between shared and
+    unshared prefills would silently break bit-exactness), while a
+    pallas *decode* with prefill_impl="xla" keeps it on."""
+    cfg = dataclasses.replace(DENSE, attn_impl="pallas")
+    params = M.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=2, budget=16, paged=True,
+                      page_size=4)
+    assert not eng.cache_mgr.sharing
+    eng = ServeEngine(cfg, params, n_slots=2, budget=16, paged=True,
+                      page_size=4, prefill_impl="xla")
+    assert eng.cache_mgr.sharing
+
+
+def test_sharing_disabled_matches_and_pays_full_prefill():
+    """The prefix_sharing=False baseline (PR 4 semantics): identical
+    streams, but every prompt token is prefilled and no pages shared."""
+    cfg = HYBRID
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(8)
+    reqs = [Request(0, pre + [5, 9], 8, arrival=0),
+            Request(1, pre + [7, 3], 8, arrival=0)]
+    eng = ServeEngine(cfg, params, n_slots=2, budget=24, paged=True,
+                      page_size=4, prefix_sharing=False)
+    check_streams(cfg, params, eng, reqs, 24)
+    assert eng.stats["prefix_hits"] == 0
+    assert eng.stats["shared_tokens"] == 0
+    assert eng.stats["prefill_tokens"] == sum(len(r.prompt) for r in reqs)
+
+
+# ----------------------------------------------- retire while shared -------
+
+def test_release_slot_never_reports_shared_pages():
+    """Manager-level scrub gate: release of one sharer reports (for
+    scrubbing) only pages that reached refcount 0 — a freed-but-shared
+    page is impossible to scrub because release never names it."""
+    mgr = PagedCacheManager(DENSE, 2, 16, page_size=4)
+    pre = sys_prompt(8)
+    assert mgr.admit_pages(0, len(pre) + 1)
+    mgr.register_prefix(0, pre + [42])
+    shared_toks, ids = mgr.match_prefix(pre + [7])
+    assert shared_toks == 8
+    assert mgr.admit_pages(1, 9, shared=ids)
+    shared_pages = {int(p) for p in ids["full"]}
+    # slot 0 retires: its exclusive tail page frees, the shared prefix
+    # pages survive at refcount 1 and stay registered
+    freed = mgr.release_slot(0)
+    reported = {int(p) for p in freed["full"] if p != P.PAGE_NULL}
+    assert not reported & shared_pages, \
+        "release reported a still-shared page for scrubbing"
+    for p in shared_pages:
+        assert mgr.alloc["full"].refcount(p) == 1
+        assert p in mgr.prefix["full"]
+    # slot 1 retires: now they free (and deregister)
+    freed = mgr.release_slot(1)
+    assert shared_pages <= {int(p) for p in freed["full"]}
+    for p in shared_pages:
+        assert p not in mgr.prefix["full"]
+    assert mgr.alloc["full"].n_held == 0
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_retire_while_shared_keeps_sharer_pages(impl):
+    """Engine-level: the registering sequence finishes first while its
+    prefix pages are still mapped by a live sharer — the survivor's
+    stream must stay bit-exact (the retirement scrub must not touch the
+    shared pages) and its prefix pages must still hold valid positions
+    on device."""
+    cfg = dataclasses.replace(DENSE, attn_impl=impl)
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(4)                          # 1 full page at ps=4
+    reqs = [Request(0, pre + [5], 2, arrival=0),   # finishes early
+            Request(1, pre + [9], 10, arrival=0)]  # keeps decoding
+    eng = ServeEngine(cfg, params, n_slots=2, budget=16, paged=True,
+                      page_size=4, prefill_impl="xla")
+    for r in reqs:
+        eng.submit(r)
+    while not eng.sequences[0].status.value == "finished":
+        eng.step()
+    assert eng.stats["prefix_hits"] == 1
+    # survivor still active: its shared prefix page must be valid
+    survivor = eng.sequences[1]
+    assert survivor.slot >= 0
+    page = int(eng.cache_mgr.tables["full"][survivor.slot, 0])
+    assert page != P.PAGE_NULL
+    eng.finish()
+    for gi, (kinds, _) in enumerate(M.cache_layout(cfg)):
+        for pi, kind in enumerate(kinds):
+            if kind == "full":
+                leaf = eng.cache_mgr.cache["groups"][gi][pi]
+                np.testing.assert_array_equal(
+                    np.asarray(leaf.pos)[:, page],
+                    np.broadcast_to(np.arange(4), (leaf.pos.shape[0], 4)))
+    while not eng.done:
+        eng.step()
+    eng.finish()
+    ref = lockstep_single(cfg, params, reqs[1].prompt, 10, 16)
+    assert list(survivor.out_tokens) == ref
+
+
+# ------------------------------------------- preemption under sharing ------
+
+def test_preemption_under_sharing_preserves_streams():
+    """Oversubscribed pool with shared prefixes in flight: preemption
+    (swap-out must not evict pages another sequence reads) and
+    resumption keep every stream bit-identical to the unshared
+    oracle."""
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(4)
+    reqs = [Request(0, pre + [5, 9], 10, arrival=0),
+            Request(1, pre + [7, 3], 10, arrival=0),
+            Request(2, pre + [2, 8], 8, arrival=1)]
+    eng = ServeEngine(cfg, params, n_slots=3, budget=16, paged=True,
+                      page_size=4, pool_pages=7)
+    check_streams(cfg, params, eng, reqs, 16)
+    assert eng.stats["preemptions"] > 0, \
+        "trace was meant to exercise preemption"
+    assert eng.stats["prefix_hits"] > 0
+    for kind, alloc in eng.cache_mgr.alloc.items():
+        assert alloc.n_held == 0, kind
+
+
+# --------------------------------------------------- page accounting -------
+
+def test_shared_pages_counted_once():
+    """N sequences over one system prompt occupy the shared pages once:
+    peak distinct pages held is strictly below the unshared footprint,
+    with identical streams."""
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(8)                          # 2 shared pages
+    reqs = [Request(i, pre + [10 + i], 4, arrival=0) for i in range(4)]
+
+    def serve(sharing):
+        eng = ServeEngine(cfg, params, n_slots=4, budget=16, paged=True,
+                          page_size=4, prefix_sharing=sharing)
+        for r in reqs:
+            eng.submit(r)
+        peak = 0
+        while not eng.done:
+            eng.step()
+            peak = max(peak, sum(eng.cache_mgr.pages_held().values()))
+        eng.finish()
+        return {s.rid: list(s.out_tokens) for s in eng.sequences}, peak
+
+    streams_off, peak_off = serve(False)
+    streams_on, peak_on = serve(True)
+    assert streams_on == streams_off
+    # 4 sequences × 2 shared pages collapse to one resident copy
+    assert peak_on <= peak_off - 2 * (len(reqs) - 1)
