@@ -613,6 +613,86 @@ def bench_prefix_sharing():
         "peak_pages_ratio": out["peak_pages_ratio"]})
 
 
+# ----------------------------------------------------------------- E11 -----
+
+def bench_fault_overhead():
+    """Price of the always-on fault guards (the cf4ocl "negligible
+    overhead" claim, reproduced for serving).
+
+    The same fault-free Poisson trace is served by the paged engine with
+    ``guards=True`` (per-tick NaN/Inf scan over the sampled logits +
+    deadline/cancellation sweep — the production default) and
+    ``guards=False`` (the scan and sweep skipped).  No faults are
+    injected, so the runs are byte-identical; the measured gap is pure
+    guard cost.  Best-of-reps decode throughput; the acceptance target
+    is < 2 % overhead (recorded as ``guards_lt_2pct``), with a lenient
+    10 % hard bound so a noisy CI host cannot flake the lane.  Results
+    land under the ``fault_overhead`` key of BENCH_serve.json.
+    """
+    import jax
+    import numpy as np
+    from repro.models.model import ModelConfig, init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = ModelConfig(name="bench-serve", family="dense", num_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=256, dtype="float32")
+    n_slots, budget, reps = 4, 48, 3
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    rng = np.random.default_rng(42)
+    arrivals = np.cumsum(rng.poisson(1.5, size=16))
+    reqs = [Request(i, [int(t) for t in rng.integers(0, cfg.vocab,
+                                                     rng.integers(4, 13))],
+                    int(rng.integers(4, 17)), arrival=int(a))
+            for i, a in enumerate(arrivals)]
+
+    def serve(guards):
+        eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget,
+                          paged=True, page_size=4, guards=guards)
+        streams = eng.run(reqs)
+        return streams, eng.stats["decoded_tokens"]
+
+    out = {"backend": jax.default_backend(),
+           "trace": {"n_requests": len(reqs), "n_slots": n_slots,
+                     "budget": budget, "reps": reps},
+           "rows": []}
+    streams_by, tok_s_by = {}, {}
+    for name, guards in [("guards_off", False), ("guards_on", True)]:
+        serve(guards)                           # warmup (jit compile)
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            streams, decoded = serve(guards)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        streams_by[name] = streams
+        tok_s_by[name] = decoded / best
+        out["rows"].append({"policy": name, "decoded_tokens": decoded,
+                            "tok_s": tok_s_by[name], "wall_s": best})
+        print(f"# {name}: {decoded} decode tokens in {best:.3f}s "
+              f"({tok_s_by[name]:,.1f} tok/s)", file=sys.stderr)
+        _emit(f"fault_overhead_{name}", best * 1e6,
+              f"tok_s={tok_s_by[name]:.1f}")
+    out["streams_match"] = streams_by["guards_off"] == \
+        streams_by["guards_on"]
+    out["overhead_frac"] = max(
+        0.0, 1.0 - tok_s_by["guards_on"] / tok_s_by["guards_off"])
+    out["guards_lt_2pct"] = out["overhead_frac"] < 0.02
+    print(f"# streams_match={out['streams_match']} guard overhead "
+          f"{out['overhead_frac'] * 100:.2f}% "
+          f"(<2%: {out['guards_lt_2pct']})", file=sys.stderr)
+    assert out["streams_match"], "guards changed fault-free streams!"
+    assert out["overhead_frac"] < 0.10, \
+        f"guard path costs {out['overhead_frac'] * 100:.1f}% decode tok/s"
+    _merge_snapshot(ROOT / "BENCH_serve.json", {"fault_overhead": out})
+    _history_append("fault_overhead", {
+        "rows": out["rows"], "streams_match": out["streams_match"],
+        "overhead_frac": out["overhead_frac"],
+        "guards_lt_2pct": out["guards_lt_2pct"]})
+
+
 BENCHES = {
     "loc_compare": bench_loc_compare,
     "overhead": bench_overhead,
@@ -624,6 +704,7 @@ BENCHES = {
     "serve_throughput": bench_serve_throughput,
     "paged_vs_dense": bench_paged_vs_dense,
     "prefix_sharing": bench_prefix_sharing,
+    "fault_overhead": bench_fault_overhead,
 }
 
 

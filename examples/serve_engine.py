@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.errors import err_string
 from repro.models.model import init_params
 from repro.prof import Prof, queue_chart
 from repro.serve.engine import Request, ServeEngine
@@ -52,6 +53,12 @@ def main() -> int:
                          "every request (paged mode: full pages of it "
                          "are served from shared physical pages with "
                          "copy-on-write)")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    metavar="D",
+                    help="give every request a D-tick service deadline: "
+                         "requests unfinished D ticks after submission "
+                         "fail with DEADLINE_EXCEEDED instead of "
+                         "occupying the queue (the batch streams on)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,7 +74,8 @@ def main() -> int:
                     system +
                     [int(t) for t in rng.integers(0, cfg.vocab,
                                                   rng.integers(8, 25))],
-                    int(rng.integers(6, 21)), arrival=int(a))
+                    int(rng.integers(6, 21)), arrival=int(a),
+                    deadline_ticks=args.deadline_ticks)
             for i, a in enumerate(arrivals)]
 
     eng = ServeEngine(cfg, params, n_slots=args.slots, budget=args.budget,
@@ -78,17 +86,22 @@ def main() -> int:
     streams = eng.run(reqs)
     prof.stop()
 
+    seq_of = {s.rid: s for s in eng.sequences}
     for r in reqs:
         s = streams[r.rid]
-        print(f"req {r.rid:2d}: arrival={r.arrival:3d} "
-              f"prompt={len(r.prompt):2d} budget={r.max_new_tokens:2d} "
-              f"→ {len(s):2d} tokens: {s[:8]}{'…' if len(s) > 8 else ''}")
+        line = (f"req {r.rid:2d}: arrival={r.arrival:3d} "
+                f"prompt={len(r.prompt):2d} budget={r.max_new_tokens:2d} "
+                f"→ {len(s):2d} tokens: {s[:8]}{'…' if len(s) > 8 else ''}")
+        err = seq_of[r.rid].error
+        if err is not None:
+            line += f"  [FAILED: {err_string(err.code)}]"
+        print(line)
     st = eng.stats
     util = st["decoded_tokens"] / max(1, st["decode_steps"] * args.slots)
     print(f"\n{eng.tick} ticks, {st['prefills']} prefills, "
           f"{st['decode_steps']} decode steps, "
           f"{st['decoded_tokens']} decoded tokens "
-          f"(slot utilization {util:.2f})")
+          f"(slot utilization {util:.2f}), {st['failures']} failed")
     if args.paged:
         print(f"paged pool: {st['preemptions']} preemptions, "
               f"{st['swap_ins']} swap-ins, resident KV "

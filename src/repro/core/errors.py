@@ -45,6 +45,10 @@ class Code(enum.IntEnum):
     ELASTIC_RESHAPE_FAILURE = -103
     STRAGGLER_TIMEOUT = -104
     WRAPPER_LEAK = -105
+    NUMERIC_FAULT = -106
+    DEADLINE_EXCEEDED = -107
+    CANCELLED = -108
+    SUBMISSION_FAILURE = -109
 
 
 _ERR_STRINGS = {
@@ -67,6 +71,12 @@ _ERR_STRINGS = {
     Code.ELASTIC_RESHAPE_FAILURE: "Elastic reshard between meshes failed",
     Code.STRAGGLER_TIMEOUT: "Worker heartbeat missed straggler deadline",
     Code.WRAPPER_LEAK: "Wrapper objects leaked (new/destroy mismatch)",
+    Code.NUMERIC_FAULT:
+        "Non-finite values (NaN/Inf) detected in a kernel output",
+    Code.DEADLINE_EXCEEDED: "Request deadline expired before completion",
+    Code.CANCELLED: "Request cancelled by the client",
+    Code.SUBMISSION_FAILURE:
+        "Queue submission failed after bounded retries",
 }
 
 

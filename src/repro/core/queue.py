@@ -11,17 +11,30 @@ JAX's async dispatch supplies the concurrency: ``enqueue`` returns as soon
 as the computation is dispatched; ``finish`` blocks (``clFinish``).
 Two queues used from two host threads genuinely overlap compute with
 host transfers, which is exactly the structure of the paper's PRNG example.
+
+**Bounded retry**: a queue created with ``max_retries > 0`` re-attempts a
+failed ``enqueue`` submission up to that many times with exponential
+backoff (``backoff_s · 2^attempt``) before reporting — transient faults
+(a flaky lane, an injected chaos fault) are absorbed invisibly, and only
+exhaustion surfaces, as a structured
+:class:`~repro.core.errors.ReproError` with
+``Code.SUBMISSION_FAILURE`` through the usual dual channel (raise, or
+record in the caller's :class:`~repro.core.errors.ErrBox`).  Structured
+``ReproError`` failures from the submitted fn itself are *not* retried —
+they are deliberate reports, not transient lane faults.  With
+``max_retries == 0`` (the default) failures propagate exactly as before.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, List, Optional
 
 import jax
 
 from .context import Context
-from .errors import Code, ErrBox, guard, raise_or_record
+from .errors import Code, ErrBox, ReproError, guard, raise_or_record
 from .event import Event
 from .wrapper import Wrapper
 
@@ -54,12 +67,21 @@ class DispatchQueue(Wrapper):
     _counter = 0
 
     def __init__(self, context: Context, name: Optional[str] = None,
-                 profiling: bool = True):
+                 profiling: bool = True, max_retries: int = 0,
+                 backoff_s: float = 0.0):
         DispatchQueue._counter += 1
         super().__init__(("queue", DispatchQueue._counter))
         self.context = context
         self.name = name or f"q{DispatchQueue._counter}"
         self.profiling = profiling
+        assert max_retries >= 0 and backoff_s >= 0.0
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.retries = 0           # attempts absorbed by the retry policy
+        # deterministic fault-injection seam (ft.inject): called as
+        # ``fault_hook(event_name, attempt)`` before every submission
+        # attempt and may raise to simulate a lane failure
+        self.fault_hook: Optional[Callable[[str, int], None]] = None
         self._events: List[Event] = []
         self._lock = threading.Lock()
         # outputs of every submission since the last finish() — finish must
@@ -85,6 +107,11 @@ class DispatchQueue(Wrapper):
 
         Returns the (possibly not-yet-ready) outputs.  The recorded event is
         retrievable as ``queue.events[-1]`` and is named for aggregation.
+
+        With ``max_retries > 0`` a failing submission is retried with
+        exponential backoff; exhaustion reports
+        ``Code.SUBMISSION_FAILURE`` through the dual channel.  A
+        ``ReproError`` raised by ``fn`` itself is never retried.
         """
         evt = Event(self.name, command_type, name) if self.profiling else None
         with guard(err) as g:
@@ -96,7 +123,7 @@ class DispatchQueue(Wrapper):
                 e.try_complete()
             if evt:
                 evt.mark_start()
-            out = fn(*args, **kwargs)
+            out = self._submit(fn, name or command_type, args, kwargs)
             with self._lock:
                 if evt:
                     evt.attach_outputs(out)
@@ -104,6 +131,31 @@ class DispatchQueue(Wrapper):
                 self._track_output_locked(out)
             return out
         return None
+
+    def _submit(self, fn: Callable[..., Any], label: str, args, kwargs):
+        """One submission under the bounded-retry policy (the fault-hook
+        seam fires before every attempt, so injected lane faults exercise
+        exactly the path a real transient failure would take)."""
+        attempt = 0
+        while True:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(label, attempt)
+                return fn(*args, **kwargs)
+            except ReproError:
+                raise               # structured report, not a lane fault
+            except Exception as e:  # noqa: BLE001 — retry policy boundary
+                if attempt >= self.max_retries:
+                    if self.max_retries == 0:
+                        raise       # no retry policy: propagate verbatim
+                    raise ReproError(
+                        Code.SUBMISSION_FAILURE,
+                        f"{self.name}/{label} failed after {attempt + 1} "
+                        f"attempts: {type(e).__name__}: {e}", e) from e
+                self.retries += 1
+                if self.backoff_s:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+                attempt += 1
 
     def enqueue_read(self, buffer, blocking: bool = True,
                      name: Optional[str] = None,

@@ -1,0 +1,260 @@
+"""Deterministic fault injection for the serve engine.
+
+Robustness claims are only as good as the faults they were tested
+against.  This module turns "what if the allocator runs dry / a kernel
+emits NaNs / a lane submission flakes / a host stalls" into a
+*reproducible experiment*: a :class:`FaultPlan` is a pure function of a
+seed, every injected fault fires at a deterministic place (a rid, a
+``(slot, tick)``, the N-th occurrence of a lane event), and replaying
+the same plan against the same trace produces byte-identical outcomes —
+which is exactly what the chaos conformance suite
+(tests/test_fault_injection.py) asserts: under *any* plan, failed
+requests terminate with the expected structured
+:class:`~repro.core.errors.ReproError` code, every page returns to the
+free list refcount-exact, and surviving sequences' streams are
+byte-identical to the fault-free lockstep oracle.
+
+Injection seams (all opt-in, zero cost when no plan is attached):
+
+* **admission OOM** — ``admission_oom(rid)`` makes the engine treat that
+  request's prompt as never-admittable (``OUT_OF_RESOURCES``);
+* **growth OOM** — ``take_growth_oom(tick)`` forces one
+  ``prepare_write`` failure that tick, driving preemption (absorbed,
+  bit-exact) or — with a single active sequence — a per-request
+  ``OUT_OF_RESOURCES`` failure;
+* **NaN logits** — ``corrupt_logits`` overwrites the planned slots' rows
+  with NaN *after* the decode kernel, exercising the quarantine guard
+  exactly as a numerically-poisoned kernel would;
+* **lane faults** — ``lane_fault`` raises :class:`InjectedFault` from
+  the :class:`~repro.core.queue.DispatchQueue` fault hook at the
+  planned occurrence of a named event, for ``fails`` consecutive
+  attempts: ``fails <= max_retries`` is absorbed by bounded retry
+  (streams unchanged, ``queue.retries`` ticks up), ``fails >
+  max_retries`` surfaces ``SUBMISSION_FAILURE``.  Plans only persist
+  faults on Admit-lane events (prefill / align / page-insert), where
+  exhaustion fails one request; a persistent decode-lane fault is
+  batch-wide and a persistent ``PAGE_SCRUB`` fault would corrupt the
+  release path itself — both are documented-fatal, not injected;
+* **host stalls** — ``stall_s(tick)`` tells :func:`chaos_run` how long
+  the (virtual) host clock jumps that tick, driving
+  :class:`~repro.ft.supervisor.Supervisor` straggler detection against
+  the engine with no wall-clock sleeping and no flakiness.
+
+:class:`VirtualClock` + :func:`chaos_run` close the loop: one function
+that serves a trace while advancing a virtual clock, beating a
+supervisor heartbeat per tick, and applying planned stalls — the whole
+chaos experiment is deterministic end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Optional, Sequence as Seq, Set, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected failure (never a ReproError: the retry
+    layer must see it as a foreign lane fault, not a structured
+    report)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneFault:
+    """Fail the ``index``-th occurrence (0-based, counted per
+    ``(lane, event)``) of a lane event, for ``fails`` consecutive
+    attempts.  ``fails <= max_retries`` → absorbed by retry; greater →
+    the submission exhausts and surfaces ``SUBMISSION_FAILURE``."""
+    lane: str        # "Admit" | "Decode"
+    event: str       # e.g. "PREFILL_KERNEL", "DECODE_KERNEL"
+    index: int       # which occurrence of (lane, event) to hit
+    fails: int       # consecutive failing attempts
+
+
+# Admit-lane events whose submission failure is absorbed per-request
+# (the half-admitted sequence fails; the batch survives).  Persistent
+# faults are restricted to these.
+ADMIT_EVENTS = ("PREFILL_KERNEL", "ALIGN_CACHE", "PAGE_INSERT",
+                "SLOT_INSERT", "PREFIX_GATHER")
+# events safe for *transient* faults on either lane (retry absorbs them)
+TRANSIENT_EVENTS = (("Admit", "PREFILL_KERNEL"), ("Admit", "ALIGN_CACHE"),
+                    ("Admit", "PAGE_INSERT"), ("Decode", "DECODE_KERNEL"))
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A deterministic schedule of injected faults (see module doc).
+
+    Construct directly for targeted unit scenarios, or via
+    :meth:`random` for seed-driven chaos sweeps.  Attach to an engine
+    with ``ServeEngine(..., fault_plan=plan)``; the engine calls
+    :meth:`reset` at construction so one plan object can be replayed
+    across engines (e.g. the same seed on xla and pallas-interpret).
+    """
+    seed: int = 0
+    nan_at: FrozenSet[Tuple[int, int]] = frozenset()   # {(slot, tick)}
+    admit_oom: FrozenSet[int] = frozenset()            # {rid}
+    growth_oom: FrozenSet[int] = frozenset()           # {tick}, once each
+    lane_faults: Tuple[LaneFault, ...] = ()
+    stalls: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.nan_at = frozenset(self.nan_at)
+        self.admit_oom = frozenset(self.admit_oom)
+        self.growth_oom = frozenset(self.growth_oom)
+        for f in self.lane_faults:
+            # PAGE_SCRUB / SWAP_OUT run inside release paths where a
+            # raise would leak state — never inject there
+            if f.lane == "Admit":
+                assert f.event in ADMIT_EVENTS + ("SWAP_IN",), \
+                    f"uninjectable Admit-lane event: {f}"
+            else:
+                assert f.event in ("DECODE_KERNEL", "PAGE_COW"), \
+                    f"uninjectable Decode-lane event: {f}"
+        self.reset()
+
+    # -- replay state ----------------------------------------------------
+    def reset(self) -> None:
+        """Rewind consumed state so the plan replays identically."""
+        self._growth_pending: Set[int] = set(self.growth_oom)
+        self._lane_seen: Dict[Tuple[str, str], int] = {}
+        self._lane_idx: Dict[Tuple[str, str], int] = {}
+
+    # -- injection seams (called by the engine / queue) ------------------
+    def admission_oom(self, rid: int) -> bool:
+        return rid in self.admit_oom
+
+    def take_growth_oom(self, tick: int) -> bool:
+        """True exactly once per planned tick (a forced ``prepare_write``
+        failure repeats forever otherwise: the engine re-plans after
+        preempting)."""
+        if tick in self._growth_pending:
+            self._growth_pending.discard(tick)
+            return True
+        return False
+
+    def corrupt_logits(self, lg: np.ndarray, tick: int) -> np.ndarray:
+        """Overwrite planned slots' logit rows with NaN (post-kernel —
+        models a numerically poisoned kernel output)."""
+        rows = [s for (s, t) in self.nan_at if t == tick and s < len(lg)]
+        if rows:
+            lg = lg.copy()
+            lg[rows, :] = np.nan
+        return lg
+
+    def lane_fault(self, lane: str, event: str, attempt: int) -> None:
+        """DispatchQueue fault hook: raise :class:`InjectedFault` if a
+        planned fault covers this occurrence+attempt.  Occurrences are
+        counted at ``attempt == 0`` only, so retries of one submission
+        stay within one occurrence."""
+        key = (lane, event)
+        if attempt == 0:
+            idx = self._lane_seen.get(key, 0)
+            self._lane_seen[key] = idx + 1
+            self._lane_idx[key] = idx
+        else:
+            idx = self._lane_idx.get(key, -1)
+        for f in self.lane_faults:
+            if (f.lane == lane and f.event == event and f.index == idx
+                    and attempt < f.fails):
+                raise InjectedFault(
+                    f"injected: {lane}/{event}#{idx} attempt {attempt}")
+
+    def stall_s(self, tick: int) -> float:
+        return self.stalls.get(tick, 0.0)
+
+    # -- seed-driven construction ----------------------------------------
+    @classmethod
+    def random(cls, seed: int, *, n_slots: int, rids: Seq[int],
+               horizon: int, retries: int = 2) -> "FaultPlan":
+        """A seed-deterministic mixed plan: a few NaN shots, maybe an
+        admission OOM, maybe a forced growth OOM, transient lane flakes
+        (within ``retries``), maybe one persistent Admit-lane fault, and
+        maybe one host stall.  ``horizon`` bounds the tick coordinates;
+        ``rids`` is the candidate pool for admission OOM."""
+        rng = np.random.default_rng(seed)
+        hi = max(2, horizon)
+        nan_at = {(int(rng.integers(0, n_slots)),
+                   int(rng.integers(1, hi)))
+                  for _ in range(int(rng.integers(0, 3)))}
+        admit_oom = set()
+        if len(rids) and rng.random() < 0.5:
+            admit_oom.add(int(rng.choice(np.asarray(rids))))
+        growth_oom = set()
+        if rng.random() < 0.5:
+            growth_oom.add(int(rng.integers(1, hi)))
+        faults = []
+        if retries > 0:
+            for _ in range(int(rng.integers(0, 3))):
+                lane, event = TRANSIENT_EVENTS[
+                    int(rng.integers(0, len(TRANSIENT_EVENTS)))]
+                faults.append(LaneFault(
+                    lane, event, int(rng.integers(0, 4)),
+                    int(rng.integers(1, retries + 1))))
+        if rng.random() < 0.4:
+            # one persistent fault, Admit-lane only (absorbed per-request)
+            event = ADMIT_EVENTS[int(rng.integers(0, 3))]
+            faults.append(LaneFault("Admit", event,
+                                    int(rng.integers(0, 3)), retries + 1))
+        stalls = {}
+        if rng.random() < 0.5:
+            stalls[int(rng.integers(1, hi))] = float(rng.uniform(0.3, 1.0))
+        return cls(seed=seed, nan_at=nan_at, admit_oom=admit_oom,
+                   growth_oom=growth_oom, lane_faults=tuple(faults),
+                   stalls=stalls)
+
+
+class VirtualClock:
+    """Monotonic virtual time: ``now`` is a drop-in for
+    ``time.monotonic`` (pass ``clock=vc.now`` to a Supervisor);
+    :func:`chaos_run` advances it per tick, so stall-driven straggler
+    detection is deterministic and instant."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0
+        self.t += dt
+
+
+def chaos_run(engine, requests, *, clock: Optional[VirtualClock] = None,
+              supervisor=None, worker_id: str = "serve-0",
+              tick_s: float = 0.1, max_ticks: int = 100_000
+              ) -> Dict[int, list]:
+    """Serve a trace under the engine's attached :class:`FaultPlan`,
+    advancing a virtual clock and a supervisor heartbeat per tick.
+
+    Per tick: submit due arrivals → advance ``clock`` by ``tick_s`` plus
+    any planned stall → ``supervisor.check()`` (the stalled interval is
+    observed while the worker is still silent, so a stall ≥
+    ``straggler_factor × tick_s`` lands a straggler event) → beat →
+    ``engine.step()``.  Returns ``{rid: tokens}`` for *all* sequences —
+    failed ones carry whatever they streamed before failing."""
+    plan = getattr(engine, "_plan", None)
+    pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    i = 0
+    while i < len(pending) or not engine.done:
+        if engine.tick > max_ticks:
+            raise RuntimeError(
+                f"chaos trace did not converge in {max_ticks} ticks")
+        while i < len(pending) and pending[i].arrival <= engine.tick:
+            engine.submit(pending[i])
+            i += 1
+        if clock is not None:
+            stall = plan.stall_s(engine.tick) if plan is not None else 0.0
+            clock.advance(tick_s + stall)
+            if supervisor is not None:
+                supervisor.check()
+                supervisor.beat(worker_id, engine.tick)
+        engine.step()
+    engine.finish()
+    return {s.rid: list(s.out_tokens) for s in engine.sequences}
+
+
+__all__ = ["FaultPlan", "LaneFault", "InjectedFault", "VirtualClock",
+           "chaos_run", "ADMIT_EVENTS", "TRANSIENT_EVENTS"]

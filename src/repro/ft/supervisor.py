@@ -40,11 +40,17 @@ class Supervisor:
     def __init__(self, expected_workers: int,
                  dead_after_s: float = 30.0,
                  straggler_factor: float = 2.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 step_window: int = 32):
+        assert step_window > 0
         self.expected = expected_workers
         self.dead_after_s = dead_after_s
         self.straggler_factor = straggler_factor
         self.clock = clock
+        # per-worker step_times are a rolling window of this many
+        # samples: the median adapts to drifting step times and memory
+        # stays bounded on long-lived supervisors
+        self.step_window = step_window
         self.workers: Dict[str, WorkerInfo] = {}
         self._lock = threading.Lock()
         self.restarts = 0
@@ -60,7 +66,7 @@ class Supervisor:
                 self.workers[worker_id] = w
             if w.last_step >= 0 and step > w.last_step:
                 w.step_times.append(now - w.last_beat)
-                w.step_times = w.step_times[-32:]
+                w.step_times = w.step_times[-self.step_window:]
             w.last_beat = now
             w.last_step = step
             if w.state is not WorkerState.HEALTHY:

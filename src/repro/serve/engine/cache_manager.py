@@ -171,6 +171,19 @@ class PagedCacheManager:
             return 0, {}
         return m * self.page_size, {kind: r[:m] for kind, r in runs.items()}
 
+    def can_ever_admit(self, n_positions: int,
+                       shared_pages: int = 0) -> bool:
+        """False iff a sequence with ``n_positions`` written positions
+        needs more *fresh* pages of some kind than the arena could ever
+        grant — no amount of retiring or preempting other sequences can
+        make the admission succeed.  The engine fails such a request
+        with ``OUT_OF_RESOURCES`` instead of blocking the queue on it
+        forever (``can_admit`` gates the *transient* case)."""
+        return all(
+            self.used_ptes(kind, n_positions) - shared_pages <=
+            self.alloc[kind].capacity
+            for kind in self.widths)
+
     def can_admit(self, n_positions: int, shared_pages: int = 0) -> bool:
         """True iff every kind has the *fresh* pages a sequence with
         ``n_positions`` already-written positions needs right now, the

@@ -54,6 +54,38 @@ write lands in a shared page (refcount > 1) the engine copies-on-write
 streams stay bit-identical to unshared runs while resident pages and
 prefill FLOPs drop with every shared prompt.
 
+**Fault tolerance** (DESIGN.md "Failure model & graceful degradation"):
+one bad request must never take down the batch.  Every per-sequence
+fault lands in that sequence's error channel — a terminal ``FAILED``
+status carrying a structured :class:`~repro.core.errors.ReproError` —
+while the rest of the fleet streams on bit-identically:
+
+* **deadlines / cancellation**: a request with ``deadline_ticks`` that
+  has not finished within that many ticks of submission fails with
+  ``DEADLINE_EXCEEDED``; a client calling ``Sequence.cancel()`` fails it
+  with ``CANCELLED`` at the next tick.  Both work from any state —
+  queued, active, or preempted.
+* **admission OUT_OF_RESOURCES**: a prompt that needs more fresh pages
+  than the arena could *ever* grant fails at admission instead of
+  blocking the queue forever; transient pool pressure still just waits.
+* **NaN/Inf quarantine**: a per-tick guard over the sampled logits fails
+  only the poisoned slot (``NUMERIC_FAULT``) — the poisoned token is
+  never emitted, so the failed stream is a clean prefix of its oracle.
+* **lane retry**: dispatch-queue submissions are retried with bounded
+  exponential backoff; exhaustion surfaces ``SUBMISSION_FAILURE``
+  through the per-request error channel (admission-side faults fail that
+  request only; a decode-lane exhaustion is batch-wide and fatal).
+
+All failure paths release resources exactly: pages decref'd (shared
+pages survive for their sharers), exclusive pages scrubbed and freed,
+prefix-index registrations dropped, the slot returned.  ``guards=False``
+disables the per-tick NaN check and deadline/cancel sweep — a
+bench-only mode for measuring that the always-on guard path costs
+effectively nothing (benchmark E11, the cf4ocl "negligible overhead"
+claim reproduced for serving).  A deterministic
+:class:`~repro.ft.inject.FaultPlan` can be attached to drive every one
+of these paths from the chaos conformance suite.
+
 Simplifications (documented, not accidental): greedy sampling unless a
 ``sample_fn`` is supplied; one prefill per admission (no prompt
 batching/bucketing — distinct prompt lengths retrace the prefill jit);
@@ -71,6 +103,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core import Context, DispatchQueue
+from ...core.errors import Code, ReproError
 from ...models import model as M
 from .. import paging as P
 from ..step import (ALIGN_EVENT, DECODE_EVENT, PREFILL_EVENT,
@@ -99,7 +132,11 @@ class ServeEngine:
                  sample_fn: Optional[Callable[[np.ndarray], np.ndarray]]
                  = None, paged: bool = False, page_size: int = 4,
                  pool_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 guards: bool = True,
+                 fault_plan=None,
+                 max_submission_retries: int = 2,
+                 submission_backoff_s: float = 0.0):
         """``budget`` is the decode position budget: prompt length + new
         tokens of any request must fit in it.  ``prefill_impl`` overrides
         ``cfg.attn_impl`` for prefill only (e.g. decode on the fused
@@ -113,7 +150,16 @@ class ServeEngine:
         effective pallas prefill sharing is disabled automatically —
         mixing kernels between shared and unshared prefills would break
         the bit-exactness contract silently; serve pallas decode with
-        ``prefill_impl="xla"`` to share prefixes."""
+        ``prefill_impl="xla"`` to share prefixes.
+
+        ``guards`` enables the per-tick NaN/Inf quarantine and the
+        deadline/cancellation sweep (on by default; benchmark E11 turns
+        it off to price the guard path).  ``fault_plan`` attaches a
+        deterministic :class:`~repro.ft.inject.FaultPlan` whose injected
+        faults exercise every failure path.  Lane submissions are
+        retried up to ``max_submission_retries`` times with exponential
+        ``submission_backoff_s`` backoff before a structured
+        ``SUBMISSION_FAILURE`` surfaces."""
         assert not cfg.has_cross, \
             "serve engine does not support cross-attention models"
         self.cfg = cfg
@@ -141,8 +187,20 @@ class ServeEngine:
         else:
             self.cache_mgr = BatchedCacheManager(cfg, n_slots, budget)
         ctx = context or Context.new_accel()
-        self.q_admit = DispatchQueue(ctx, "Admit")
-        self.q_decode = DispatchQueue(ctx, "Decode")
+        self.q_admit = DispatchQueue(ctx, "Admit",
+                                     max_retries=max_submission_retries,
+                                     backoff_s=submission_backoff_s)
+        self.q_decode = DispatchQueue(ctx, "Decode",
+                                      max_retries=max_submission_retries,
+                                      backoff_s=submission_backoff_s)
+        self.guards = guards
+        self._plan = fault_plan
+        if fault_plan is not None:
+            fault_plan.reset()
+            self.q_admit.fault_hook = \
+                lambda ev, att: fault_plan.lane_fault("Admit", ev, att)
+            self.q_decode.fault_hook = \
+                lambda ev, att: fault_plan.lane_fault("Decode", ev, att)
 
         # host-side per-slot decode inputs (tick-batched to device)
         self._tokens = np.zeros((n_slots, 1), np.int32)
@@ -153,20 +211,24 @@ class ServeEngine:
         self.stats = {"decode_steps": 0, "decoded_tokens": 0,
                       "prefills": 0, "preemptions": 0, "swap_ins": 0,
                       "prefill_tokens": 0, "shared_tokens": 0,
-                      "prefix_hits": 0, "cow_copies": 0}
+                      "prefix_hits": 0, "cow_copies": 0, "failures": 0}
 
     # -- client side -----------------------------------------------------
     def submit(self, request: Request) -> Sequence:
         """Queue a request; tokens appear in ``sequence.out_tokens``."""
-        assert len(request.prompt) + request.max_new_tokens <= self.budget, \
-            f"request {request.rid} exceeds the decode budget {self.budget}"
+        if len(request.prompt) + request.max_new_tokens > self.budget:
+            raise ReproError(
+                Code.INVALID_VALUE,
+                f"request {request.rid} exceeds the decode budget "
+                f"{self.budget}")
         seq = self.scheduler.submit(request)
+        seq.submitted_at = self.tick
         self.sequences.append(seq)
         return seq
 
     @property
     def done(self) -> bool:
-        return all(s.status is Status.FINISHED for s in self.sequences)
+        return all(s.status.terminal for s in self.sequences)
 
     # -- lifecycle -------------------------------------------------------
     def _retire(self, seq: Sequence) -> None:
@@ -186,6 +248,50 @@ class ServeEngine:
                 name=SCRUB_EVENT, command_type=SCRUB_EVENT)
             self.cache_mgr.update(cache)
         self.scheduler.release(slot)
+
+    def _fail(self, seq: Sequence, err: ReproError) -> None:
+        """Terminate ``seq`` with a structured error, releasing whatever
+        it holds: an active sequence gives back its slot (which decrefs
+        shared pages, scrubs+frees exclusive ones, and drops its prefix
+        registrations); a queued or preempted one is withdrawn from the
+        wait queue.  The surviving batch is untouched."""
+        if seq.slot >= 0 and self._slot_seq.get(seq.slot) is seq:
+            self._release_slot(seq.slot)
+        else:
+            self.scheduler.remove(seq)
+        seq.swap = None
+        seq.slot = -1
+        seq.status = Status.FAILED
+        seq.error = err
+        seq.finished_at = self.tick
+        self.stats["failures"] += 1
+
+    def _reap(self) -> List[Sequence]:
+        """Deadline/cancellation sweep, run at the top of every tick:
+        fail any non-terminal sequence whose client cancelled it or
+        whose ``deadline_ticks`` budget has expired (cancellation wins
+        when both apply the same tick)."""
+        failed = []
+        for seq in self.sequences:
+            if seq.status.terminal:
+                continue
+            if seq.cancel_requested:
+                self._fail(seq, ReproError(
+                    Code.CANCELLED,
+                    f"request {seq.rid} cancelled by client at tick "
+                    f"{self.tick}"))
+            elif (seq.request.deadline_ticks is not None and
+                  self.tick - seq.submitted_at >=
+                  seq.request.deadline_ticks):
+                self._fail(seq, ReproError(
+                    Code.DEADLINE_EXCEEDED,
+                    f"request {seq.rid} missed its deadline of "
+                    f"{seq.request.deadline_ticks} ticks "
+                    f"(submitted at tick {seq.submitted_at})"))
+            else:
+                continue
+            failed.append(seq)
+        return failed
 
     def _bind(self, seq: Sequence, slot: int, first_tok: int) -> None:
         """Common post-admission bookkeeping: activate, stream the first
@@ -264,7 +370,12 @@ class ServeEngine:
         self.stats["prefills"] += 1
         seq.pos = seq.prompt_len
         # first output token comes from the prefill logits
-        t0 = int(self._sample(np.asarray(logits[:, -1]))[0])
+        lg = np.asarray(logits[:, -1])
+        if self.guards and not np.isfinite(lg).all():
+            raise ReproError(
+                Code.NUMERIC_FAULT,
+                f"request {seq.rid}: non-finite prefill logits")
+        t0 = int(self._sample(lg)[0])
         self._bind(seq, slot, t0)
 
     def _swap_in(self, seq: Sequence, slot: int) -> None:
@@ -284,11 +395,25 @@ class ServeEngine:
         self._tokens[slot, 0] = seq.next_tok
         self._pos[slot] = seq.pos
 
+    def _admit_fail(self, seq: Sequence, slot: int,
+                    err: ReproError) -> None:
+        """A fault mid-admission (prefill / align / insert): make the
+        half-admitted sequence look active on its slot, then fail it —
+        ``_fail``'s release path returns the slot and every page the
+        admission bound (shared pages decref'd, fresh ones scrubbed and
+        freed, prefix registrations dropped)."""
+        self._slot_seq[slot] = seq
+        seq.status = Status.ACTIVE
+        self._fail(seq, err)
+
     def _admit(self) -> List[Sequence]:
         if not self.paged:
             admitted = []
             for seq, slot in self.scheduler.admit():
-                self._prefill_admit(seq, slot)
+                try:
+                    self._prefill_admit(seq, slot)
+                except ReproError as e:
+                    self._admit_fail(seq, slot, e)
                 admitted.append(seq)
             return admitted
         # paged: gate each admission on pages free, not just slots free.
@@ -308,18 +433,36 @@ class ServeEngine:
                 shared_toks, shared_ids = self.cache_mgr.match_prefix(
                     head.request.prompt)
                 need = head.prompt_len
+            shared_pages = shared_toks // self.page_size
+            # a prompt the arena could never hold fails *now* (structured
+            # OUT_OF_RESOURCES) instead of blocking the queue forever;
+            # transient pool pressure falls through to the wait gate
+            if not resume and (
+                    (self._plan is not None and
+                     self._plan.admission_oom(head.rid)) or
+                    not self.cache_mgr.can_ever_admit(
+                        need, shared_pages=shared_pages)):
+                self._fail(head, ReproError(
+                    Code.OUT_OF_RESOURCES,
+                    f"request {head.rid}: prompt needs more fresh pages "
+                    f"than the pool can ever grant"))
+                admitted.append(head)
+                continue
             # the gate counts shared pages once: only the fresh
             # remainder must be free
-            if not self.cache_mgr.can_admit(
-                    need, shared_pages=shared_toks // self.page_size):
+            if not self.cache_mgr.can_admit(need,
+                                            shared_pages=shared_pages):
                 break
             seq, slot = self.scheduler.pop_bind()
             ok = self.cache_mgr.admit_pages(slot, need, shared=shared_ids)
             assert ok, "gate passed but allocation failed"
-            if resume:
-                self._swap_in(seq, slot)
-            else:
-                self._prefill_admit(seq, slot, shared_toks, shared_ids)
+            try:
+                if resume:
+                    self._swap_in(seq, slot)
+                else:
+                    self._prefill_admit(seq, slot, shared_toks, shared_ids)
+            except ReproError as e:
+                self._admit_fail(seq, slot, e)
             admitted.append(seq)
         return admitted
 
@@ -348,17 +491,34 @@ class ServeEngine:
         self.stats["preemptions"] += 1
         return victim
 
-    def _provision(self) -> None:
+    def _provision(self) -> List[Sequence]:
         """Back every active slot's next ring write with a *writable*
         page: lazy growth, copy-on-write off shared pages (refcount >
         1), preempting the youngest sequence(s) on pool exhaustion.
         CoW copies run on the Decode lane ahead of the decode step, so
-        the write always lands in the private copy."""
+        the write always lands in the private copy.  Exhaustion with a
+        single active sequence cannot be relieved by preemption — that
+        sequence fails with OUT_OF_RESOURCES (returned here) and the
+        engine keeps serving."""
+        failed: List[Sequence] = []
         for slot in sorted(self._slot_seq):
             while slot in self._slot_seq:
-                plan = self.cache_mgr.prepare_write(slot,
-                                                    int(self._pos[slot]))
+                forced = (self._plan is not None and
+                          self._plan.take_growth_oom(self.tick))
+                plan = None if forced else self.cache_mgr.prepare_write(
+                    slot, int(self._pos[slot]))
                 if plan is None:
+                    if len(self._slot_seq) <= 1:
+                        # no victim to evict: the arena cannot back this
+                        # sequence's next write even alone — fail it
+                        # instead of deadlocking the pool
+                        seq = self._slot_seq[slot]
+                        self._fail(seq, ReproError(
+                            Code.OUT_OF_RESOURCES,
+                            f"request {seq.rid}: paged pool exhausted "
+                            f"with a single active sequence"))
+                        failed.append(seq)
+                        break
                     # pool dry: evict and re-plan (the eviction may have
                     # dropped a refcount to 1, obviating a copy)
                     self._preempt_one()
@@ -375,22 +535,40 @@ class ServeEngine:
                     self.stats["cow_copies"] += sum(
                         len(v[0]) for v in plan.values())
                 break
+        return failed
 
     def _decode_tick(self) -> List[Sequence]:
+        finished: List[Sequence] = []
         if self.paged:
-            self._provision()
+            finished += self._provision()
             self.cache_mgr.sync()
         active = sorted(self._slot_seq)
         if not active:
-            return []
+            return finished
         logits, cache = self.q_decode.enqueue(
             self._decode, self.params, self.cache_mgr.cache,
             jnp.asarray(self._tokens), jnp.asarray(self._pos),
             name=DECODE_EVENT, command_type=DECODE_EVENT)
         self.cache_mgr.update(cache)
         self.stats["decode_steps"] += 1
-        nxt = self._sample(np.asarray(logits[:, 0]))      # (n_slots,)
-        finished = []
+        lg = np.asarray(logits[:, 0])                     # (n_slots, V)
+        if self._plan is not None:
+            lg = self._plan.corrupt_logits(lg, self.tick)
+        if self.guards:
+            # NaN/Inf quarantine: fail only the poisoned slots, *before*
+            # sampling streams a garbage token — the failed stream stays
+            # a clean prefix of its fault-free oracle and every other
+            # slot decodes on unperturbed
+            for slot in list(active):
+                if not np.isfinite(lg[slot]).all():
+                    seq = self._slot_seq[slot]
+                    self._fail(seq, ReproError(
+                        Code.NUMERIC_FAULT,
+                        f"request {seq.rid}: non-finite decode logits "
+                        f"at tick {self.tick} (slot {slot})"))
+                    finished.append(seq)
+                    active.remove(slot)
+        nxt = self._sample(lg)                            # (n_slots,)
         for slot in active:
             seq = self._slot_seq[slot]
             tok = int(nxt[slot])
@@ -405,11 +583,14 @@ class ServeEngine:
         return finished
 
     def step(self) -> List[Sequence]:
-        """One engine tick: admit, then one batched decode step.
+        """One engine tick: reap deadlines/cancellations, admit, then
+        one batched decode step.
 
-        Returns the sequences that finished this tick."""
-        finished = [s for s in self._admit()
-                    if s.status is Status.FINISHED]
+        Returns the sequences that reached a *terminal* state this tick
+        — FINISHED or FAILED; callers distinguish via ``status`` and
+        read the structured error from ``Sequence.error``."""
+        finished = self._reap() if self.guards else []
+        finished += [s for s in self._admit() if s.status.terminal]
         finished += self._decode_tick()
         self.tick += 1
         return finished

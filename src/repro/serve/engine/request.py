@@ -1,15 +1,33 @@
 """Request/Sequence lifecycle for the continuous-batching serve engine.
 
 A :class:`Request` is what a client submits: a prompt, a generation
-budget, and (in simulations) the tick at which it arrives.  A
-:class:`Sequence` is the engine's mutable view of one request as it moves
-through the lifecycle::
+budget, optional delivery constraints (``deadline_ticks``), and (in
+simulations) the tick at which it arrives.  A :class:`Sequence` is the
+engine's mutable view of one request as it moves through the lifecycle::
 
     QUEUED ──admit──▶ ACTIVE ──max_new / eos──▶ FINISHED
-              │                        │
-           (slot bound,             (slot released,
-            prompt prefilled         reusable by the
-            into the slot)           next admission)
+      │       │                        │
+      │    (slot bound,             (slot released,
+      │     prompt prefilled         reusable by the
+      │     into the slot)           next admission)
+      │
+      └──cancel / deadline / fault──▶ FAILED   (terminal; pages released,
+                                                ``error`` carries the
+                                                structured ReproError)
+
+``FAILED`` is reachable from *any* non-terminal state: a queued request
+can deadline-out before a slot frees, an active one can be cancelled or
+quarantined mid-decode (NaN logits, pool exhaustion, lane-submission
+exhaustion), a preempted one can be cancelled while swapped out.  The
+engine guarantees that whichever path is taken, every page / refcount /
+prefix-index entry the sequence held is released — failure of one
+request never leaks resources or perturbs the surviving batch.
+
+Validation happens at construction (cf4ocl-style ``INVALID_VALUE``
+reports): an empty prompt, a non-positive token budget, or a
+non-positive deadline raises a structured
+:class:`~repro.core.errors.ReproError` immediately instead of failing
+deep inside prefill.
 
 ``Sequence.pos`` is the absolute position of the *next* token fed to
 decode: after prefilling a prompt of length ``L`` (positions ``0..L-1``)
@@ -25,6 +43,8 @@ import dataclasses
 import enum
 from typing import List, Optional, Sequence as Seq
 
+from ...core.errors import Code, ReproError
+
 
 class Status(enum.Enum):
     QUEUED = "queued"        # submitted, waiting for a free slot
@@ -32,20 +52,46 @@ class Status(enum.Enum):
     PREEMPTED = "preempted"  # evicted from the paged pool; KV swapped
                              # out, queued at the front for resumption
     FINISHED = "finished"    # budget exhausted or EOS; slot released
+    FAILED = "failed"        # cancelled / deadline / fault; slot and
+                             # pages released, Sequence.error set
+
+    @property
+    def terminal(self) -> bool:
+        return self in (Status.FINISHED, Status.FAILED)
 
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One generation request (immutable client-side view)."""
+    """One generation request (immutable client-side view).
+
+    ``deadline_ticks`` (optional) bounds the *service* time: if the
+    request has not finished within that many engine ticks of its
+    submission, it fails with ``Code.DEADLINE_EXCEEDED`` and releases
+    every resource it held — a stuck queue can never hold a client
+    hostage past its deadline.
+    """
     rid: int
     prompt: Seq[int]
     max_new_tokens: int
     arrival: int = 0                  # tick at which the request appears
     eos_id: Optional[int] = None      # stop token (None = budget only)
+    deadline_ticks: Optional[int] = None  # fail if unfinished after this
+                                          # many ticks from submission
 
     def __post_init__(self):
-        assert len(self.prompt) > 0, "empty prompt"
-        assert self.max_new_tokens > 0, "need a positive token budget"
+        if len(self.prompt) == 0:
+            raise ReproError(Code.INVALID_VALUE,
+                             f"request {self.rid}: empty prompt")
+        if self.max_new_tokens <= 0:
+            raise ReproError(
+                Code.INVALID_VALUE,
+                f"request {self.rid}: max_new_tokens must be positive, "
+                f"got {self.max_new_tokens}")
+        if self.deadline_ticks is not None and self.deadline_ticks <= 0:
+            raise ReproError(
+                Code.INVALID_VALUE,
+                f"request {self.rid}: deadline_ticks must be positive, "
+                f"got {self.deadline_ticks}")
 
 
 @dataclasses.dataclass
@@ -57,8 +103,16 @@ class Sequence:
     pos: int = -1                     # next decode position (= prompt_len
                                       # + emitted - 1 while active)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
-    admitted_at: int = -1             # tick stamps for latency accounting
+    submitted_at: int = -1            # tick stamps for latency accounting
+    admitted_at: int = -1             # and deadline enforcement
     finished_at: int = -1
+    # terminal failure report (status FAILED): the structured error that
+    # killed the sequence — Code.CANCELLED / DEADLINE_EXCEEDED /
+    # NUMERIC_FAULT / OUT_OF_RESOURCES / SUBMISSION_FAILURE
+    error: Optional[ReproError] = None
+    # client-driven cancellation: set by cancel(), honoured by the engine
+    # at the next tick (the engine owns the release bookkeeping)
+    cancel_requested: bool = False
     # preemption swap state (paged engine): the sequence's extracted page
     # blocks and the pending decode-input token, restored verbatim on
     # resumption so the stream is bit-identical to an uninterrupted run
@@ -76,6 +130,13 @@ class Sequence:
     @property
     def prompt_len(self) -> int:
         return len(self.request.prompt)
+
+    def cancel(self) -> None:
+        """Ask the engine to abandon this sequence.  Takes effect at the
+        start of the next tick: the sequence fails with
+        ``Code.CANCELLED`` and releases its slot/pages (no-op once
+        terminal)."""
+        self.cancel_requested = True
 
     def emit(self, token: int) -> bool:
         """Record one generated token; True iff the sequence is done."""

@@ -17,6 +17,9 @@ batch width).  The scheduler owns the slot ⇄ request binding:
 * **requeue_front** puts a preempted sequence back at the *head* of the
   wait queue: a sequence evicted to relieve pool pressure resumes
   before any fresh request is admitted;
+* **remove** withdraws a waiting sequence without binding it (client
+  cancellation, deadline expiry, or an admission that can never be
+  served) — a failed head no longer blocks the queue behind it;
 * **release** returns a finished sequence's slot to the free pool, where
   the next admission reuses it (the whole point of continuous batching:
   a retired slot turns into fresh work without draining the batch).
@@ -53,6 +56,17 @@ class SlotScheduler:
         """Put a preempted sequence at the head of the wait queue (it
         resumes before any fresh admission)."""
         self._waiting.appendleft(seq)
+
+    def remove(self, seq: Sequence) -> bool:
+        """Withdraw a waiting sequence (cancellation / deadline expiry /
+        admission failure): it leaves the queue without ever binding a
+        slot.  True iff it was waiting (False = not in this queue; the
+        caller decides whether that is a bug)."""
+        try:
+            self._waiting.remove(seq)
+            return True
+        except ValueError:
+            return False
 
     @property
     def n_waiting(self) -> int:

@@ -157,6 +157,14 @@ class PageAllocator:
         (refcount reached 0)."""
         return bool(self.free([int(page)]))
 
+    def state(self) -> tuple:
+        """Hashable accounting snapshot ``(free page set, {page:
+        refcount})`` — what the fault-tolerance conformance suite
+        compares before/after a failed sequence's release to prove the
+        failure path is refcount-exact (no leak, no over-free)."""
+        return (frozenset(self._free),
+                tuple(sorted(self._refs.items())))
+
 
 class PrefixIndex:
     """Chain-hashed token-prefix → physical-page index (full pages only).
@@ -239,6 +247,12 @@ class PrefixIndex:
         key = self._key_of.pop(int(page), None)
         if key is not None:
             del self._page_of[key]
+
+    def state(self) -> tuple:
+        """Hashable registration snapshot (chain key → page), for the
+        same before/after failure-path comparisons as
+        :meth:`PageAllocator.state`."""
+        return tuple(sorted(self._page_of.items()))
 
 
 # ------------------------------------------------------------ structure ----

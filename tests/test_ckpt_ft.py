@@ -113,6 +113,27 @@ class TestSupervisor:
         assert plan["devices"] == 16
         assert "w3" not in plan["survivors"]
 
+    def test_step_times_bounded_rolling_window(self):
+        """WorkerInfo.step_times is a rolling window of ``step_window``
+        samples: a long-lived supervisor never grows it unboundedly and
+        the straggler median tracks only recent behaviour."""
+        clk = FakeClock()
+        sup = Supervisor(1, straggler_factor=2.0, clock=clk,
+                         step_window=8)
+        # 100 slow steps (2s), then 50 fast ones (0.1s)
+        for step in range(100):
+            sup.beat("w0", step)
+            clk.advance(2.0)
+        assert len(sup.workers["w0"].step_times) == 8
+        for step in range(100, 150):
+            sup.beat("w0", step)
+            clk.advance(0.1)
+        w = sup.workers["w0"]
+        assert len(w.step_times) == 8
+        # the window forgot the slow era entirely
+        assert max(w.step_times) <= 0.1 + 1e-9
+        assert sup._median_step_time() <= 0.1 + 1e-9
+
     def test_heartbeat_thread(self):
         sup = Supervisor(1, dead_after_s=5)
         hb = Heartbeat(sup, "w0", interval_s=0.05).start()

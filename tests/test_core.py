@@ -17,6 +17,19 @@ class TestErrors:
     def test_err_string_unknown(self):
         assert "Unknown" in err_string(-31337)
 
+    def test_every_code_has_err_string(self):
+        """Single conversion function, total over the enum: every Code
+        member — including additions — must map to a human-readable
+        string (a KeyError here means a code was added without one)."""
+        for code in Code:
+            s = err_string(code)
+            assert s and "Unknown" not in s, code
+        # the fault-tolerance additions specifically
+        assert "NaN" in err_string(Code.NUMERIC_FAULT)
+        assert "deadline" in err_string(Code.DEADLINE_EXCEEDED).lower()
+        assert "cancel" in err_string(Code.CANCELLED).lower()
+        assert "retries" in err_string(Code.SUBMISSION_FAILURE).lower()
+
     def test_dual_reporting_raise(self):
         with pytest.raises(ReproError):
             c.Context.new_from_filters(

@@ -373,3 +373,61 @@ def test_shared_pages_counted_once():
     assert streams_on == streams_off
     # 4 sequences × 2 shared pages collapse to one resident copy
     assert peak_on <= peak_off - 2 * (len(reqs) - 1)
+
+
+# -------------------------------------------- release on failure -----------
+
+@settings(max_examples=12)
+@given(st.integers(1, 2),
+       st.sampled_from(["cancel", "deadline", "nan"]),
+       st.integers(0, 127))
+def test_failure_releases_shared_prefix_exactly(kill_after, mode, tail):
+    """Property: killing a sequence that holds shared prefix pages — by
+    client cancellation, deadline expiry, or NaN quarantine — returns
+    the allocators, free lists, and prefix indexes *exactly* to their
+    pre-admission state: shared pages decref back to the donor's count,
+    the sharer's exclusive pages free, and no registration leaks."""
+    from repro.core.errors import Code
+    from repro.ft.inject import FaultPlan
+    from repro.serve.engine import Status
+
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(8)                          # 2 full shared pages
+    plan = FaultPlan(nan_at={(1, 1 + kill_after)}) if mode == "nan" \
+        else None
+    eng = ServeEngine(cfg, params, n_slots=2, budget=16, paged=True,
+                      page_size=4, fault_plan=plan)
+    donor = eng.submit(Request(0, pre, 8))
+    eng.step()                                   # donor settles in page 2
+    snap_alloc = {k: a.state() for k, a in eng.cache_mgr.alloc.items()}
+    snap_index = {k: i.state() for k, i in eng.cache_mgr.prefix.items()}
+
+    deadline = kill_after if mode == "deadline" else None
+    sharer = eng.submit(Request(1, pre + [tail], 7,
+                                deadline_ticks=deadline))
+    for i in range(kill_after + 3):
+        eng.step()
+        if mode == "cancel" and i + 1 == kill_after:
+            sharer.cancel()
+        if sharer.status is Status.FAILED:
+            break
+    assert sharer.status is Status.FAILED, (mode, sharer.status)
+    assert sharer.error.code is {
+        "cancel": Code.CANCELLED, "deadline": Code.DEADLINE_EXCEEDED,
+        "nan": Code.NUMERIC_FAULT}[mode]
+    assert eng.stats["prefix_hits"] == 1
+    assert {k: a.state() for k, a in eng.cache_mgr.alloc.items()} \
+        == snap_alloc, "allocator state did not return to pre-admission"
+    assert {k: i.state() for k, i in eng.cache_mgr.prefix.items()} \
+        == snap_index, "prefix index did not return to pre-admission"
+
+    # the donor is unperturbed: stream equals its oracle, pool drains
+    while not eng.done:
+        eng.step()
+    eng.finish()
+    assert donor.status is Status.FINISHED
+    assert list(donor.out_tokens) == lockstep_single(cfg, params, pre,
+                                                     8, 16)
+    for kind, alloc in eng.cache_mgr.alloc.items():
+        assert alloc.n_held == 0, kind
