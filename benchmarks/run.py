@@ -693,6 +693,107 @@ def bench_fault_overhead():
         "guards_lt_2pct": out["guards_lt_2pct"]})
 
 
+# ----------------------------------------------------------------- E12 -----
+
+def bench_elastic_batching():
+    """Shape-bucketed serving vs exact-shape serving (the jit retrace
+    storm), same Poisson trace with 13 distinct prompt lengths.
+
+    ``bucketed`` draws every step shape from the static ladders (packed
+    decode widths, prompt length buckets) — compile count is bounded by
+    the ladder sizes; ``fixed`` (``buckets=False``) retraces prefill
+    once per distinct prompt length and always decodes at full width.
+    Each mode gets one *cold* run under a fresh config name (compile-
+    inclusive wall time + compile counts from ``stats["compiles"]``),
+    then best-of-reps warm runs for steady-state decode tok/s.  Prompt
+    lengths stay in the bit-exact padding regime, so the two modes must
+    stream byte-identically; acceptance: bucketed compiles at most one
+    prefill per ladder rung and steady-state tok/s is no worse than
+    fixed (lenient 0.8× hard bound for noisy CI hosts).  Results land
+    under the ``elastic_batching`` key of BENCH_serve.json.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+    from repro.models.model import ModelConfig, init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    base = ModelConfig(name="bench-elastic", family="dense", num_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                       d_ff=128, vocab=256, dtype="float32")
+    n_slots, budget, reps = 4, 48, 3
+
+    rng = np.random.default_rng(42)
+    lengths = list(range(4, 17)) + [6, 10, 14]      # 13 distinct of 16
+    rng.shuffle(lengths)
+    arrivals = np.cumsum(rng.poisson(1.5, size=len(lengths)))
+    prompts = [[int(t) for t in rng.integers(0, base.vocab, L)]
+               for L in lengths]
+    news = [int(rng.integers(4, 17)) for _ in lengths]
+
+    def serve(cfg, buckets):
+        reqs = [Request(i, p, n, arrival=int(a))
+                for i, (p, n, a) in enumerate(zip(prompts, news, arrivals))]
+        eng = ServeEngine(cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                          n_slots=n_slots, budget=budget, buckets=buckets)
+        streams = eng.run(reqs)
+        return streams, eng.stats["decoded_tokens"], \
+            dict(eng.stats["compiles"])
+
+    out = {"backend": jax.default_backend(),
+           "trace": {"n_requests": len(lengths), "n_slots": n_slots,
+                     "budget": budget, "reps": reps,
+                     "distinct_prompt_lengths": len(set(lengths))},
+           "rows": []}
+    streams_by, tok_s_by, compiles_by = {}, {}, {}
+    for name, buckets in [("bucketed", True), ("fixed", False)]:
+        # fresh config name → cold process-global jit caches: the cold
+        # run prices the compile storm (or its absence)
+        cfg = dataclasses.replace(base, name=f"bench-elastic-{name}")
+        t0 = time.perf_counter()
+        streams, decoded, compiles = serve(cfg, buckets)
+        cold = time.perf_counter() - t0
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            streams, decoded, _ = serve(cfg, buckets)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        streams_by[name] = streams
+        tok_s_by[name] = decoded / best
+        compiles_by[name] = compiles
+        out["rows"].append({"mode": name, "compiles": compiles,
+                            "total_compiles": sum(compiles.values()),
+                            "decoded_tokens": decoded,
+                            "cold_wall_s": cold, "wall_s": best,
+                            "tok_s": tok_s_by[name]})
+        print(f"# {name}: compiles={compiles} cold={cold:.3f}s "
+              f"warm {decoded} tokens in {best:.3f}s "
+              f"({tok_s_by[name]:,.1f} tok/s)", file=sys.stderr)
+        _emit(f"elastic_batching_{name}", best * 1e6,
+              f"tok_s={tok_s_by[name]:.1f} "
+              f"compiles={sum(compiles.values())}")
+    out["streams_match"] = streams_by["bucketed"] == streams_by["fixed"]
+    out["compile_ratio"] = sum(compiles_by["fixed"].values()) / max(
+        1, sum(compiles_by["bucketed"].values()))
+    out["tok_s_ratio"] = tok_s_by["bucketed"] / tok_s_by["fixed"]
+    print(f"# streams_match={out['streams_match']} compile ratio "
+          f"{out['compile_ratio']:.1f}x  tok/s ratio "
+          f"{out['tok_s_ratio']:.2f}x", file=sys.stderr)
+    assert out["streams_match"], "bucketing changed exact-regime streams!"
+    assert compiles_by["bucketed"]["prefill"] < \
+        out["trace"]["distinct_prompt_lengths"], \
+        "bucketed prefill compiled once per length — no bucketing?"
+    assert out["tok_s_ratio"] > 0.8, \
+        f"bucketed serving lost {(1 - out['tok_s_ratio']) * 100:.0f}% tok/s"
+    _merge_snapshot(ROOT / "BENCH_serve.json", {"elastic_batching": out})
+    _history_append("elastic_batching", {
+        "rows": out["rows"], "streams_match": out["streams_match"],
+        "compile_ratio": out["compile_ratio"],
+        "tok_s_ratio": out["tok_s_ratio"]})
+
+
 BENCHES = {
     "loc_compare": bench_loc_compare,
     "overhead": bench_overhead,
@@ -705,6 +806,7 @@ BENCHES = {
     "paged_vs_dense": bench_paged_vs_dense,
     "prefix_sharing": bench_prefix_sharing,
     "fault_overhead": bench_fault_overhead,
+    "elastic_batching": bench_elastic_batching,
 }
 
 

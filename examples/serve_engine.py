@@ -22,7 +22,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core.errors import err_string
 from repro.models.model import init_params
-from repro.prof import Prof, queue_chart
+from repro.prof import Prof, compile_summary, queue_chart
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -59,6 +59,17 @@ def main() -> int:
                          "requests unfinished D ticks after submission "
                          "fail with DEADLINE_EXCEEDED instead of "
                          "occupying the queue (the batch streams on)")
+    ap.add_argument("--buckets", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="draw every jitted step shape from the static "
+                         "bucket ladders (packed decode widths, prompt "
+                         "length buckets — one compile per rung); "
+                         "--no-buckets restores exact shapes, i.e. one "
+                         "retrace per distinct prompt length")
+    ap.add_argument("--warmup", action="store_true",
+                    help="eagerly compile the bucket ladders before "
+                         "serving (compile hits land up front, not on "
+                         "first use)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -80,7 +91,10 @@ def main() -> int:
 
     eng = ServeEngine(cfg, params, n_slots=args.slots, budget=args.budget,
                       prefill_impl="xla", paged=args.paged,
-                      page_size=args.page_size, pool_pages=args.pool_pages)
+                      page_size=args.page_size, pool_pages=args.pool_pages,
+                      buckets=args.buckets)
+    if args.warmup:
+        eng.warmup()
     prof = Prof()
     prof.start()
     streams = eng.run(reqs)
@@ -111,10 +125,16 @@ def main() -> int:
               f"{st['shared_tokens'] + st['prefill_tokens']} prompt "
               f"tokens, {st['cow_copies']} CoW copies")
 
+    compiles = " ".join(f"{k}={v}" for k, v in st["compiles"].items())
+    print(f"jit compiles ({'bucketed' if args.buckets else 'exact shapes'})"
+          f": {compiles or 'none'}")
+
     prof.add_queue("Admit", eng.q_admit)
     prof.add_queue("Decode", eng.q_decode)
+    prof.add_events("Compile", eng.compile_events)
     prof.calc()
     print(prof.get_summary())
+    print(compile_summary(prof), end="")
     print(queue_chart(prof, width=80))
     return 0
 

@@ -314,7 +314,8 @@ def _group_forward(cfg: ModelConfig, pattern: Pattern, count: int, gp,
 def forward(cfg: ModelConfig, params, tokens, *,
             ctx_embed: Optional[jax.Array] = None,
             cache: Optional[Dict] = None,
-            pos0: Optional[jax.Array] = None
+            pos0: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Returns (hidden (B,T,D), new_cache, aux_loss).
 
@@ -325,10 +326,18 @@ def forward(cfg: ModelConfig, params, tokens, *,
     Partial prefill (prefix sharing): cache is a *prefix* cache under
     ``cfg.collect_kv``, tokens (B, T>1) resume the prompt mid-sequence
     and scalar pos0 is the resume offset — positions = pos0 + arange(T).
+    An explicit ``positions`` (T,) int32 overrides both derivations —
+    the shape-bucketed prefill path passes ``-1`` for right-padding
+    positions, which the attention masks treat as never-valid (the same
+    sentinel the ring caches use for unwritten slots).
     """
     B, T = tokens.shape
     x = L.embed(params["embed"], tokens, cfg.embed_scale)
-    if pos0 is None:
+    if positions is not None:
+        assert positions.ndim == 1, \
+            "explicit positions are a (T,) plan shared by the batch"
+        positions = jnp.asarray(positions, jnp.int32)
+    elif pos0 is None:
         positions = jnp.arange(T)
     else:
         # int32 throughout: positions feed ring indices and the int32

@@ -1,11 +1,12 @@
 """repro.prof — integrated profiling of dispatch events (paper §4.3)."""
 
-from .export import export_table, parse_table, queue_chart, render_queue_chart
+from .export import (compile_summary, export_table, parse_table,
+                     queue_chart, render_queue_chart)
 from .profiler import (InstType, Prof, ProfAgg, ProfInfo, ProfInst,
                        ProfOverlap, Sort)
 
 __all__ = [
     "Prof", "ProfAgg", "ProfInfo", "ProfInst", "ProfOverlap", "InstType",
-    "Sort", "export_table", "parse_table", "queue_chart",
+    "Sort", "compile_summary", "export_table", "parse_table", "queue_chart",
     "render_queue_chart",
 ]

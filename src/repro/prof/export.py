@@ -80,4 +80,27 @@ def queue_chart(prof: Prof, width: int = 100) -> str:
         [(i.queue, i.t_start, i.t_end, i.name) for i in infos], width)
 
 
-__all__ = ["export_table", "parse_table", "render_queue_chart", "queue_chart"]
+def compile_summary(prof: Prof) -> str:
+    """Per-bucket jit-compile report from the serve engine's
+    ``TRACE_COMPILE`` events (see ``serve.step.BucketRegistry``): one row
+    per compiled bucket shape — ``TRACE_COMPILE:prefill[16]`` etc. — with
+    its wall time, plus totals.  Empty string when the profile holds no
+    compile events (e.g. a fully warm process), so callers can print the
+    result unconditionally."""
+    infos = [i for i in prof.iter_infos()
+             if i.name.startswith("TRACE_COMPILE")]
+    if not infos:
+        return ""
+    buf = io.StringIO()
+    name_w = max(len(i.name) for i in infos)
+    buf.write(f"{'bucket':<{name_w}s}  {'compile ms':>10s}\n")
+    for i in sorted(infos, key=lambda i: i.name):
+        buf.write(f"{i.name:<{name_w}s}  {i.duration / 1e6:>10.2f}\n")
+    total = sum(i.duration for i in infos)
+    buf.write(f"{'total (' + str(len(infos)) + ' compiles)':<{name_w}s}"
+              f"  {total / 1e6:>10.2f}\n")
+    return buf.getvalue()
+
+
+__all__ = ["export_table", "parse_table", "render_queue_chart",
+           "queue_chart", "compile_summary"]

@@ -8,7 +8,7 @@ Public surface::
     streams = eng.run([Request(0, prompt, max_new_tokens=16), ...])
 """
 
-from .cache_manager import BatchedCacheManager, PagedCacheManager
+from .cache_manager import BatchedCacheManager, CowBatch, PagedCacheManager
 from .engine import (COW_EVENT, INSERT_EVENT, PAGE_INSERT_EVENT,
                      PREFIX_GATHER_EVENT, SCRUB_EVENT, SWAP_IN_EVENT,
                      SWAP_OUT_EVENT, ServeEngine)
@@ -16,7 +16,7 @@ from .request import Request, Sequence, Status
 from .scheduler import SlotScheduler
 
 __all__ = ["ServeEngine", "Request", "Sequence", "Status",
-           "SlotScheduler", "BatchedCacheManager", "PagedCacheManager",
+           "SlotScheduler", "BatchedCacheManager", "CowBatch", "PagedCacheManager",
            "INSERT_EVENT", "PAGE_INSERT_EVENT", "SWAP_OUT_EVENT",
            "SWAP_IN_EVENT", "SCRUB_EVENT", "PREFIX_GATHER_EVENT",
            "COW_EVENT"]

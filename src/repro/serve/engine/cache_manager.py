@@ -47,6 +47,56 @@ paged_gather_jit = jax.jit(P.gather_prefix, static_argnums=0)
 paged_copy_jit = jax.jit(P.copy_pages, static_argnums=0)
 
 
+class CowBatch:
+    """Per-tick accumulator for copy-on-write page copies.
+
+    :meth:`PagedCacheManager.prepare_write` plans copies slot by slot
+    (``{kind: ([srcs], [dsts])}``); paying one device dispatch per slot
+    would serialize the Decode lane behind a chain of tiny copies.  The
+    engine folds every slot's plan in here and drains the tick's union
+    as **one** ``paged_copy_jit`` argument pair: per-kind copy lists
+    padded to a shared power-of-two width with null→null identity
+    copies (the null page is garbage by contract, so copying it onto
+    itself is a no-op), which keeps the copy program compiling once per
+    width bucket instead of once per exact list-length combination."""
+
+    def __init__(self, kinds):
+        self._pending: Dict[str, Tuple[List[int], List[int]]] = \
+            {kind: ([], []) for kind in kinds}
+
+    def add(self, plan: Dict[str, Tuple[List[int], List[int]]]) -> int:
+        """Fold one slot's copy plan in; returns the number of real
+        (non-padding) copies it contributed, for the engine's
+        ``cow_copies`` accounting."""
+        for kind, (s, d) in plan.items():
+            self._pending[kind][0].extend(s)
+            self._pending[kind][1].extend(d)
+        return sum(len(s) for s, _ in plan.values())
+
+    def drain(self) -> Optional[Tuple[Dict[str, jnp.ndarray],
+                                      Dict[str, jnp.ndarray]]]:
+        """The padded device ``(src, dst)`` dicts for ``paged_copy_jit``
+        — or ``None`` when nothing is pending — and reset.  Every kind
+        is padded to the same power-of-two width so the uniform pytree
+        structure hits one compiled copy program per bucket."""
+        n = max(len(s) for s, _ in self._pending.values())
+        if n == 0:
+            return None
+        nb = 1
+        while nb < n:
+            nb *= 2
+        src, dst = {}, {}
+        for kind, (s, d) in self._pending.items():
+            a = np.full(nb, P.PAGE_NULL, np.int32)
+            a[:len(s)] = s
+            b = np.full(nb, P.PAGE_NULL, np.int32)
+            b[:len(d)] = d
+            src[kind] = jnp.asarray(a)
+            dst[kind] = jnp.asarray(b)
+            self._pending[kind] = ([], [])
+        return src, dst
+
+
 class BatchedCacheManager:
     def __init__(self, cfg: M.ModelConfig, n_slots: int, budget: int):
         self.cfg = cfg

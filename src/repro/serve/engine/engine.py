@@ -86,12 +86,33 @@ claim reproduced for serving).  A deterministic
 :class:`~repro.ft.inject.FaultPlan` can be attached to drive every one
 of these paths from the chaos conformance suite.
 
+**Shape buckets** (``buckets=True``, the default; DESIGN.md "Shape
+discipline & bucketing"): every jitted step runs at a shape drawn from a
+small static ladder, compiled once.  Per tick the active slots are
+packed into the smallest covering power-of-two width bucket — slot rows,
+tokens, positions and page tables gathered into dense ``(W,)`` tensors,
+results scattered back — and each admission pads its prompt to a
+page-aligned geometric length bucket with ``pos = -1`` masking, so a
+trace with thousands of distinct prompt lengths and arrival patterns
+compiles at most ``len(ladder)`` programs per step kind
+(:class:`~repro.serve.step.BucketRegistry`; ``stats["compiles"]`` and
+the ``TRACE_COMPILE`` events expose the counts).  Admission, the NaN
+quarantine and fault injection all operate on *logical slots* — packed
+indices never escape the decode tick.  Length bucketing changes the
+floating-point reduction shapes of prefill, so one request's stream is
+a function of its bucket, not its exact length; it is uniform across
+arrival patterns (the conformance suite's oracle prefills at the same
+bucket) and is disabled automatically for recurrent-state configs
+(ssm / rec), whose prefill scan would fold padded steps into the state.
+``buckets=False`` restores exact-shape prefill and always-full-width
+decode (one retrace per distinct prompt length — the fixed-shape
+baseline benchmark E12 prices against the ladder).
+
 Simplifications (documented, not accidental): greedy sampling unless a
-``sample_fn`` is supplied; one prefill per admission (no prompt
-batching/bucketing — distinct prompt lengths retrace the prefill jit);
-the per-tick host sync to read sampled tokens is the streaming boundary.
-Cross-attention (encoder/vision) models are not served — their context
-caches are per-request and would need slot packing of ``ctx_enc`` too.
+``sample_fn`` is supplied; one prefill per admission; the per-tick host
+sync to read sampled tokens is the streaming boundary.  Cross-attention
+(encoder/vision) models are not served — their context caches are
+per-request and would need slot packing of ``ctx_enc`` too.
 """
 
 from __future__ import annotations
@@ -107,12 +128,11 @@ from ...core.errors import Code, ReproError
 from ...models import model as M
 from .. import paging as P
 from ..step import (ALIGN_EVENT, DECODE_EVENT, PREFILL_EVENT,
-                    make_align_step, make_decode_step, make_prefill_ext_step,
-                    make_prefill_step)
-from .cache_manager import (BatchedCacheManager, PagedCacheManager,
-                            insert_jit, paged_copy_jit, paged_extract_jit,
-                            paged_gather_jit, paged_insert_jit,
-                            paged_scrub_jit)
+                    BucketRegistry)
+from .cache_manager import (BatchedCacheManager, CowBatch,
+                            PagedCacheManager, insert_jit, paged_copy_jit,
+                            paged_extract_jit, paged_gather_jit,
+                            paged_insert_jit, paged_scrub_jit)
 from .request import Request, Sequence, Status
 from .scheduler import SlotScheduler
 
@@ -134,6 +154,7 @@ class ServeEngine:
                  pool_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
                  guards: bool = True,
+                 buckets: bool = True,
                  fault_plan=None,
                  max_submission_retries: int = 2,
                  submission_backoff_s: float = 0.0):
@@ -151,6 +172,11 @@ class ServeEngine:
         mixing kernels between shared and unshared prefills would break
         the bit-exactness contract silently; serve pallas decode with
         ``prefill_impl="xla"`` to share prefixes.
+
+        ``buckets`` (on by default) draws every jitted step shape from
+        the static bucket ladders instead of exact shapes — see the
+        module docstring; turn it off to reproduce the one-retrace-per-
+        prompt-length baseline.
 
         ``guards`` enables the per-tick NaN/Inf quarantine and the
         deadline/cancellation sweep (on by default; benchmark E11 turns
@@ -172,9 +198,11 @@ class ServeEngine:
             dataclasses.replace(cfg, attn_impl=prefill_impl)
         if pcfg.attn_impl == "pallas":
             prefix_sharing = False
-        self._prefill = make_prefill_step(pcfg)
-        self._prefill_ext = make_prefill_ext_step(pcfg)
-        self._decode = make_decode_step(cfg)
+        self.buckets = bool(buckets)
+        self._registry = BucketRegistry(
+            cfg, n_slots=n_slots, budget=budget,
+            page_size=page_size if paged else None,
+            prefill_cfg=pcfg, bucketing=self.buckets)
         # greedy by default; sample_fn maps (B, V) logits → (B,) tokens
         self._sample = sample_fn or (lambda lg: np.argmax(lg, axis=-1))
 
@@ -211,7 +239,41 @@ class ServeEngine:
         self.stats = {"decode_steps": 0, "decoded_tokens": 0,
                       "prefills": 0, "preemptions": 0, "swap_ins": 0,
                       "prefill_tokens": 0, "shared_tokens": 0,
-                      "prefix_hits": 0, "cow_copies": 0, "failures": 0}
+                      "prefix_hits": 0, "cow_copies": 0, "failures": 0,
+                      # live view: the registry mutates this dict in place
+                      "compiles": self._registry.compiles}
+
+    @property
+    def compile_events(self):
+        """``TRACE_COMPILE`` profiler events recorded by the bucket
+        registry (one per shape that actually compiled) — inject into a
+        profiler with ``prof.add_events("Compile", eng.compile_events)``."""
+        return self._registry.events
+
+    def warmup(self) -> None:
+        """Eagerly compile the bucket ladders (optional): every decode
+        width, every prefill length bucket and its ring alignment, so a
+        serving process takes the compile hits before traffic instead of
+        on first use.  Outputs are discarded — the standing cache and all
+        engine state are untouched."""
+        reg = self._registry
+        cache = self.cache_mgr.cache
+        for W in reg.widths:
+            if W == self.n_slots:
+                reg.decode_full()(self.params, cache,
+                                  jnp.asarray(self._tokens),
+                                  jnp.asarray(self._pos))
+            else:
+                pad = np.full((W,), self.n_slots, np.int32)
+                reg.decode(W)(self.params, cache,
+                              jnp.zeros((W, 1), jnp.int32),
+                              jnp.full((W,), -1, jnp.int32),
+                              jnp.asarray(pad))
+        for Lb in reg.lengths:
+            _, one = reg.prefill(Lb)(self.params,
+                                     jnp.zeros((1, Lb), jnp.int32),
+                                     jnp.int32(1))
+            reg.align(Lb)(one, jnp.int32(1), jnp.int32(0))
 
     # -- client side -----------------------------------------------------
     def submit(self, request: Request) -> Sequence:
@@ -310,38 +372,58 @@ class ServeEngine:
                        shared_toks: int = 0,
                        shared_ids: Optional[Dict] = None) -> None:
         tokens = seq.request.prompt
+        reg = self._registry
+        L = seq.prompt_len
         if shared_toks:
             # prefix sharing: gather the resident shared span back into
             # prefill layout and prefill only the unshared tail — both
             # on the Admit lane, so the gather orders after the donor's
-            # own page inserts and the partial prefill after the gather
+            # own page inserts and the partial prefill after the gather.
+            # The page-id run is padded to its power-of-two bucket with
+            # null pages (pos = -1, masked) so the gather and the
+            # partial prefill compile once per bucket pair, not once per
+            # (prefix, tail) length pair.
             seq.shared_tokens = shared_toks
             self.stats["prefix_hits"] += 1
             self.stats["shared_tokens"] += shared_toks
+            m = shared_toks // self.page_size
+            m_b = reg.page_bucket(m)
+            pad_ids = {}
+            for k, v in shared_ids.items():
+                row = np.full(m_b, P.PAGE_NULL, np.int32)
+                row[:m] = v
+                pad_ids[k] = jnp.asarray(row)
             prefix = self.q_admit.enqueue(
-                paged_gather_jit, self.cfg, self.cache_mgr.cache,
-                {k: jnp.asarray(v, jnp.int32)
-                 for k, v in shared_ids.items()},
+                paged_gather_jit, self.cfg, self.cache_mgr.cache, pad_ids,
                 name=PREFIX_GATHER_EVENT, command_type=PREFIX_GATHER_EVENT)
-            tail = jnp.asarray(tokens[shared_toks:], jnp.int32)[None, :]
+            prefix_pad = m_b * self.page_size
+            tail_len = reg.len_bucket(L - shared_toks)
+            tail = np.zeros((1, tail_len), np.int32)
+            tail[0, :L - shared_toks] = tokens[shared_toks:]
             logits, cache = self.q_admit.enqueue(
-                self._prefill_ext, self.params, tail, prefix,
+                reg.prefill_ext(prefix_pad, tail_len), self.params,
+                jnp.asarray(tail), prefix, jnp.int32(shared_toks),
+                jnp.int32(L),
                 name=PREFILL_EVENT, command_type=PREFILL_EVENT)
+            ring_len = prefix_pad + tail_len
         else:
-            prompt = jnp.asarray(tokens, jnp.int32)[None, :]
+            ring_len = reg.len_bucket(L)
+            prefix_pad = 0
+            prompt = np.zeros((1, ring_len), np.int32)
+            prompt[0, :L] = tokens
             logits, cache = self.q_admit.enqueue(
-                self._prefill, self.params, prompt,
+                reg.prefill(ring_len), self.params, jnp.asarray(prompt),
+                jnp.int32(L),
                 name=PREFILL_EVENT, command_type=PREFILL_EVENT)
         self.stats["prefill_tokens"] += seq.prompt_len - shared_toks
         # relayout and slot packing are enqueued as *pure* jitted fns
         # whose outputs are the events' outputs — finish() fences
         # them and the spans track the copies, not host dispatch
+        align = reg.align(ring_len, prefix_pad)
         if self.paged:
-            align = make_align_step(self.cfg, seq.prompt_len,
-                                    target_len=self.budget,
-                                    page_size=self.page_size)
-            blocks = self.q_admit.enqueue(align, cache, name=ALIGN_EVENT,
-                                          command_type=ALIGN_EVENT)
+            blocks = self.q_admit.enqueue(
+                align, cache, jnp.int32(L), jnp.int32(shared_toks),
+                name=ALIGN_EVENT, command_type=ALIGN_EVENT)
             ids = self.cache_mgr.table_ids(slot)
             if shared_toks:
                 # donation skips the shared span: its blocks sink into
@@ -355,10 +437,9 @@ class ServeEngine:
                 ids, jnp.int32(slot),
                 name=PAGE_INSERT_EVENT, command_type=PAGE_INSERT_EVENT)
         else:
-            align = make_align_step(self.cfg, seq.prompt_len,
-                                    target_len=self.budget)
-            cache = self.q_admit.enqueue(align, cache, name=ALIGN_EVENT,
-                                         command_type=ALIGN_EVENT)
+            cache = self.q_admit.enqueue(
+                align, cache, jnp.int32(L), jnp.int32(0),
+                name=ALIGN_EVENT, command_type=ALIGN_EVENT)
             packed = self.q_admit.enqueue(
                 insert_jit, self.cache_mgr.cache, cache, jnp.int32(slot),
                 name=INSERT_EVENT, command_type=INSERT_EVENT)
@@ -495,12 +576,30 @@ class ServeEngine:
         """Back every active slot's next ring write with a *writable*
         page: lazy growth, copy-on-write off shared pages (refcount >
         1), preempting the youngest sequence(s) on pool exhaustion.
-        CoW copies run on the Decode lane ahead of the decode step, so
-        the write always lands in the private copy.  Exhaustion with a
-        single active sequence cannot be relieved by preemption — that
-        sequence fails with OUT_OF_RESOURCES (returned here) and the
-        engine keeps serving."""
+        All CoW copies of a tick are coalesced into **one** jitted
+        gather-copy on the Decode lane ahead of the decode step, so the
+        writes always land in the private copies without paying one
+        dispatch per slot; the copy lists are padded to a power-of-two
+        width with null→null identity copies so the copy program
+        compiles once per width bucket.  Pending copies are flushed
+        before any preemption or failure — their extract/scrub must
+        observe the copied-into pages.  Exhaustion with a single active
+        sequence cannot be relieved by preemption — that sequence fails
+        with OUT_OF_RESOURCES (returned here) and the engine keeps
+        serving."""
         failed: List[Sequence] = []
+        batch = CowBatch(self.cache_mgr.widths)
+
+        def flush() -> None:
+            pending = batch.drain()
+            if pending is None:
+                return
+            src, dst = pending
+            cache = self.q_decode.enqueue(
+                paged_copy_jit, self.cfg, self.cache_mgr.cache,
+                src, dst, name=COW_EVENT, command_type=COW_EVENT)
+            self.cache_mgr.update(cache)
+
         for slot in sorted(self._slot_seq):
             while slot in self._slot_seq:
                 forced = (self._plan is not None and
@@ -508,6 +607,9 @@ class ServeEngine:
                 plan = None if forced else self.cache_mgr.prepare_write(
                     slot, int(self._pos[slot]))
                 if plan is None:
+                    # the victim's swap-out / scrub must read pages the
+                    # pending copies have already written
+                    flush()
                     if len(self._slot_seq) <= 1:
                         # no victim to evict: the arena cannot back this
                         # sequence's next write even alone — fail it
@@ -523,18 +625,9 @@ class ServeEngine:
                     # dropped a refcount to 1, obviating a copy)
                     self._preempt_one()
                     continue
-                if plan:
-                    src = {k: jnp.asarray(v[0], jnp.int32)
-                           for k, v in plan.items()}
-                    dst = {k: jnp.asarray(v[1], jnp.int32)
-                           for k, v in plan.items()}
-                    cache = self.q_decode.enqueue(
-                        paged_copy_jit, self.cfg, self.cache_mgr.cache,
-                        src, dst, name=COW_EVENT, command_type=COW_EVENT)
-                    self.cache_mgr.update(cache)
-                    self.stats["cow_copies"] += sum(
-                        len(v[0]) for v in plan.values())
+                self.stats["cow_copies"] += batch.add(plan)
                 break
+        flush()
         return failed
 
     def _decode_tick(self) -> List[Sequence]:
@@ -545,13 +638,42 @@ class ServeEngine:
         active = sorted(self._slot_seq)
         if not active:
             return finished
-        logits, cache = self.q_decode.enqueue(
-            self._decode, self.params, self.cache_mgr.cache,
-            jnp.asarray(self._tokens), jnp.asarray(self._pos),
-            name=DECODE_EVENT, command_type=DECODE_EVENT)
-        self.cache_mgr.update(cache)
-        self.stats["decode_steps"] += 1
-        lg = np.asarray(logits[:, 0])                     # (n_slots, V)
+        width = self._registry.width_bucket(len(active))
+        if width < self.n_slots:
+            # pack the active slots into the smallest covering width
+            # bucket: dense (W,) tokens/positions/rows in, per-slot
+            # results scattered back inside the jitted step.  Padding
+            # rows carry the out-of-bounds sentinel n_slots and behave
+            # exactly like idle slots of the full-width path.
+            na = len(active)
+            rows = np.full((width,), self.n_slots, np.int32)
+            rows[:na] = active
+            tok = np.zeros((width, 1), np.int32)
+            tok[:na] = self._tokens[active]
+            pos = np.full((width,), -1, np.int32)
+            pos[:na] = self._pos[active]
+            logits, cache = self.q_decode.enqueue(
+                self._registry.decode(width), self.params,
+                self.cache_mgr.cache, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(rows),
+                name=DECODE_EVENT, command_type=DECODE_EVENT)
+            self.cache_mgr.update(cache)
+            self.stats["decode_steps"] += 1
+            packed_lg = np.asarray(logits[:, 0])          # (W, V)
+            # expand to slot-indexed logits so sampling, fault injection
+            # and the quarantine stay on logical slots
+            lg = np.zeros((self.n_slots,) + packed_lg.shape[1:],
+                          packed_lg.dtype)
+            lg[active] = packed_lg[:na]
+        else:
+            logits, cache = self.q_decode.enqueue(
+                self._registry.decode_full(), self.params,
+                self.cache_mgr.cache,
+                jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                name=DECODE_EVENT, command_type=DECODE_EVENT)
+            self.cache_mgr.update(cache)
+            self.stats["decode_steps"] += 1
+            lg = np.asarray(logits[:, 0])                 # (n_slots, V)
         if self._plan is not None:
             lg = self._plan.corrupt_logits(lg, self.tick)
         if self.guards:

@@ -477,6 +477,69 @@ def copy_pages(cfg: M.ModelConfig, cache: Dict, src: Dict[str, Any],
     return _walk(cfg, cache, cp)
 
 
+def gather_batch_rows(cfg: M.ModelConfig, cache: Dict, rows) -> Dict:
+    """Pack logical slot rows of a standing decode cache into a dense
+    ``(W,)``-wide cache for a width-bucketed decode step (jit-able;
+    ``rows`` is a ``(W,)`` int32 vector of slot indices, with the
+    out-of-bounds sentinel ``n_slots`` marking padding rows).
+
+    Padding rows materialize as idle slots — ``pos = -1``, all-null page
+    tables, zero K/V/state — so the decode step treats them exactly like
+    the full-width path treats an empty slot (writes sink into garbage-
+    masked ring slots / the null page).  Paged arenas and their validity
+    planes are *shared* across slots and pass through untouched; only the
+    slot-indexed leaves (dense rings, page tables, ssm/rec state) move.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+
+    def kv(kind: str, c: KVCache, _blk) -> KVCache:
+        if c.page_table is not None:
+            pt = jnp.take(c.page_table, rows, axis=1, mode="fill",
+                          fill_value=PAGE_NULL)
+            return KVCache(c.k, c.v, c.pos, pt)
+        return KVCache(
+            jnp.take(c.k, rows, axis=1, mode="fill", fill_value=0),
+            jnp.take(c.v, rows, axis=1, mode="fill", fill_value=0),
+            None if c.pos is None else
+            jnp.take(c.pos, rows, axis=1, mode="fill", fill_value=-1))
+
+    def st(kind, c, _blk):
+        return jax.tree.map(
+            lambda a: jnp.take(a, rows, axis=1, mode="fill",
+                               fill_value=0), c)
+
+    return _walk(cfg, cache, kv, st)
+
+
+def scatter_batch_rows(cfg: M.ModelConfig, cache: Dict, packed: Dict,
+                       rows) -> Dict:
+    """Unpack a width-bucketed decode step's cache back into the standing
+    full-width cache (inverse of :func:`gather_batch_rows`; jit-able).
+
+    Slot-indexed leaves scatter row ``i`` into slot ``rows[i]``; padding
+    rows (``rows == n_slots``, out of bounds) are dropped.  Paged arenas
+    are adopted wholesale from ``packed`` — decode already wrote through
+    the gathered page tables straight into the shared arenas (padding
+    rows wrote the null page, which is garbage by contract) — while the
+    full-width ``page_table`` leaf of the standing cache is kept."""
+    rows = jnp.asarray(rows, jnp.int32)
+
+    def kv(kind: str, c: KVCache, blk: KVCache) -> KVCache:
+        if c.page_table is not None:
+            return KVCache(blk.k, blk.v, blk.pos, c.page_table)
+        return KVCache(
+            c.k.at[:, rows].set(blk.k, mode="drop"),
+            c.v.at[:, rows].set(blk.v, mode="drop"),
+            c.pos if c.pos is None else
+            c.pos.at[:, rows].set(blk.pos, mode="drop"))
+
+    def st(kind, c, blk):
+        return jax.tree.map(
+            lambda a, b: a.at[:, rows].set(b, mode="drop"), c, blk)
+
+    return _walk(cfg, cache, kv, st, blocks=packed)
+
+
 def with_page_tables(cfg: M.ModelConfig, cache: Dict,
                      tables: Dict[str, np.ndarray]) -> Dict:
     """Rebuild every KV leaf's ``page_table`` from the host-side tables
@@ -505,4 +568,5 @@ def kv_resident_bytes(cache: Dict) -> int:
 __all__ = ["PAGE_NULL", "PageAllocator", "PrefixIndex", "kv_widths",
            "paged_cache_init", "ring_to_page_blocks", "insert_pages",
            "extract_pages", "scrub_pages", "gather_prefix", "copy_pages",
-           "with_page_tables", "kv_resident_bytes"]
+           "gather_batch_rows", "scatter_batch_rows", "with_page_tables",
+           "kv_resident_bytes"]

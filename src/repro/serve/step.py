@@ -22,6 +22,20 @@ callable, so servers that rebuild steps per request never retrace.
 ``DECODE_EVENT``/``PREFILL_EVENT`` are the canonical event names for
 dispatch-queue submissions, letting the profiler aggregate decode traffic
 separately from prefill.
+
+**Shape buckets** (DESIGN.md "Shape discipline & bucketing"): the legacy
+factories above still trace one program per *exact* input shape — every
+distinct prompt length retraces the prefill jit and the decode step is
+pinned at the full slot width.  :class:`BucketRegistry` replaces them for
+the serve engine: every jitted step runs at a shape drawn from a small
+static ladder — decode widths in powers of two up to ``n_slots``
+(:func:`width_ladder`), prompt lengths rounded up to a page-aligned
+geometric ladder (:func:`length_ladder`) with ``pos = -1`` masking the
+padding — so a trace with thousands of distinct prompt lengths compiles
+at most ``len(ladder)`` prefill programs.  The registry wraps each step
+to detect actual traces (jit cache-size delta), recording a
+``TRACE_COMPILE`` profiler event and a per-kind compile count that the
+engine surfaces as ``stats()["compiles"]``.
 """
 
 from __future__ import annotations
@@ -34,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.event import Event
 from ..dist.sharding import ShardCtx, use_ctx
 from ..models import model as M
 from ..models.attention import KVCache
@@ -41,6 +56,7 @@ from ..models.attention import KVCache
 PREFILL_EVENT = "PREFILL_KERNEL"
 DECODE_EVENT = "DECODE_KERNEL"
 ALIGN_EVENT = "ALIGN_CACHE"
+TRACE_COMPILE_EVENT = "TRACE_COMPILE"
 
 
 def _build_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
@@ -227,6 +243,315 @@ def align_prefill_cache(cfg: M.ModelConfig, cache: Dict, seq_len: int,
     return out
 
 
+# --------------------------------------------------- shape bucketing ------
+
+def width_ladder(n_slots: int) -> Tuple[int, ...]:
+    """Decode width buckets: powers of two up to ``n_slots``, plus
+    ``n_slots`` itself (the classic full-width step)."""
+    assert n_slots >= 1, n_slots
+    out, w = [], 1
+    while w < n_slots:
+        out.append(w)
+        w *= 2
+    out.append(n_slots)
+    return tuple(out)
+
+
+def length_ladder(quantum: int, max_len: int) -> Tuple[int, ...]:
+    """Prompt length buckets: a geometric (×2) ladder of multiples of
+    ``quantum`` (the page size in paged mode) whose last rung covers
+    ``max_len`` — the decode budget, since admission rejects longer
+    prompts."""
+    assert quantum >= 1 and max_len >= 1, (quantum, max_len)
+    out, b = [], quantum
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return tuple(out)
+
+
+def _build_prefill_bucket_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx],
+                               bucket_len: int):
+    """Length-bucketed prefill: tokens are right-padded to the static
+    ``bucket_len`` and the traced ``true_len`` drives a ``pos = -1`` mask
+    over the padding — the same sentinel the ring caches use for
+    unwritten slots, so the padded tail is invisible to every attention
+    mask and lands in the collected cache as never-written positions.
+    One compiled program serves every prompt length in the bucket."""
+    pcfg = dataclasses.replace(cfg, collect_kv=True)
+
+    def prefill_bucket(params, tokens, true_len, ctx_embed=None):
+        with use_ctx(ctx):
+            ar = jnp.arange(bucket_len, dtype=jnp.int32)
+            positions = jnp.where(ar < true_len, ar, -1)
+            hidden, cache, _ = M.forward(pcfg, params, tokens,
+                                         ctx_embed=ctx_embed,
+                                         positions=positions)
+            # first output token falls out of the *last real* position
+            last = jax.lax.dynamic_slice_in_dim(hidden, true_len - 1, 1,
+                                                axis=1)
+            logits = M.logits_fn(pcfg, params, last)
+        return logits, cache
+
+    return jax.jit(prefill_bucket)
+
+
+def _build_prefill_ext_bucket_step(cfg: M.ModelConfig,
+                                   ctx: Optional[ShardCtx],
+                                   prefix_pad: int, tail_len: int):
+    """Bucketed *partial* prefill: the gathered prefix span is padded to
+    ``prefix_pad`` positions (null pages, ``pos = -1``) and the fresh
+    tail to ``tail_len``; the traced ``(true_prefix, true_len)`` pair
+    masks both paddings.  Replaces the per-``(s, L-s)`` retrace of
+    :func:`make_prefill_ext_step` with one program per bucket pair."""
+    # the T>1024 flash fallback in the collect path is causal by *index*,
+    # which mid-array prefix padding would break — stay on the masked path
+    assert prefix_pad + tail_len <= 1024, \
+        "bucketed partial prefill requires the position-masked XLA path"
+    pcfg = dataclasses.replace(cfg, collect_kv=True)
+
+    def prefill_ext_bucket(params, tokens, prefix_cache, true_prefix,
+                           true_len):
+        with use_ctx(ctx):
+            ar = jnp.arange(tail_len, dtype=jnp.int32)
+            positions = jnp.where(true_prefix + ar < true_len,
+                                  true_prefix + ar, -1)
+            hidden, cache, _ = M.forward(pcfg, params, tokens,
+                                         cache=prefix_cache,
+                                         positions=positions)
+            last = jax.lax.dynamic_slice_in_dim(
+                hidden, true_len - true_prefix - 1, 1, axis=1)
+            logits = M.logits_fn(pcfg, params, last)
+        return logits, cache
+
+    return jax.jit(prefill_ext_bucket)
+
+
+def align_prefill_cache_dyn(cfg: M.ModelConfig, cache: Dict, true_len,
+                            target_len: int, true_prefix=0,
+                            prefix_pad: int = 0) -> Dict:
+    """Traced-length variant of :func:`align_prefill_cache`: the collected
+    cache spans a *static* bucket (ring axis ``S ≥ true_len``; slots past
+    the prompt are ``pos = -1`` padding) and ``true_len`` is a traced
+    scalar, so one compiled program aligns every prompt length in the
+    bucket.
+
+    Ring slot ``j`` of width ``W`` receives the newest prompt position
+    ``p ≡ j (mod W)``, i.e. ``p = j + W·⌊(true_len-1-j)/W⌋``; slots with
+    ``p < 0`` (budget beyond the prompt) become unwritten (``pos = -1``,
+    zero K/V — bit-identical to the static path's zero padding).  With a
+    bucketed shared prefix the source layout is ``[prefix_pad | tail]``:
+    position ``p`` lives in slot ``p`` for ``p < true_prefix`` and slot
+    ``prefix_pad + (p - true_prefix)`` past it."""
+    true_len = jnp.asarray(true_len, jnp.int32)
+    true_prefix = jnp.asarray(true_prefix, jnp.int32)
+    out = {k: v for k, v in cache.items() if k != "groups"}
+    groups = []
+    for gi, (kinds, _) in enumerate(M.cache_layout(cfg)):
+        leaves = []
+        for pi, kind in enumerate(kinds):
+            c = cache["groups"][gi][pi]
+            if kind in M.KV_KINDS and isinstance(c, KVCache):
+                W = cfg.cache_len(kind, target_len)
+                j = jnp.arange(W, dtype=jnp.int32)
+                p = j + W * jnp.floor_divide(true_len - 1 - j, W)
+                valid = p >= 0           # p < true_len ≤ S by construction
+                slot = jnp.where(p < true_prefix, p,
+                                 p + (prefix_pad - true_prefix))
+                src = jnp.where(valid, slot, 0)
+                vmask = valid[:, None]
+                c = KVCache(
+                    jnp.where(vmask, jnp.take(c.k, src, axis=-2), 0),
+                    jnp.where(vmask, jnp.take(c.v, src, axis=-2), 0),
+                    None if c.pos is None else jnp.broadcast_to(
+                        jnp.where(valid, p, -1),
+                        c.pos.shape[:-1] + (W,)))
+            leaves.append(c)
+        groups.append(tuple(leaves))
+    out["groups"] = groups
+    return out
+
+
+def _build_align_bucket_step(cfg: M.ModelConfig, ring_len: int,
+                             target_len: int, page_size: Optional[int],
+                             prefix_pad: int):
+    """Jitted dynamic relayout (``(cache, true_len, true_prefix) → ring``
+    or page blocks), cached per (cfg, bucketed span, budget, page size,
+    prefix pad) — ``ring_len`` only names the bucket for the cache key;
+    the traced shapes carry it."""
+    del ring_len
+
+    def align_dyn(cache, true_len, true_prefix):
+        aligned = align_prefill_cache_dyn(cfg, cache, true_len, target_len,
+                                          true_prefix, prefix_pad)
+        if page_size is None:
+            return aligned
+        from .paging import ring_to_page_blocks  # circular-import guard
+        return ring_to_page_blocks(cfg, aligned, page_size)
+
+    return jax.jit(align_dyn)
+
+
+def _build_decode_packed_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx]):
+    """Width-packed decode: gather the active slots' rows into a dense
+    ``(W,)`` batch, run the ordinary decode step at width ``W``, scatter
+    the results back (padding rows — ``rows == n_slots`` — are dropped).
+    One builder per (cfg, ctx); jit retraces once per packed width, which
+    the engine draws from :func:`width_ladder`."""
+    from .paging import gather_batch_rows, scatter_batch_rows
+
+    def decode_packed(params, cache, token, pos, rows):
+        with use_ctx(ctx):
+            small = gather_batch_rows(cfg, cache, rows)
+            logits, new_small = M.decode_step(cfg, params, small, token,
+                                              pos)
+            new_cache = scatter_batch_rows(cfg, cache, new_small, rows)
+        return logits, new_cache
+
+    return jax.jit(decode_packed)
+
+
+_cached_prefill_bucket = functools.cache(_build_prefill_bucket_step)
+_cached_prefill_ext_bucket = functools.cache(_build_prefill_ext_bucket_step)
+_cached_align_bucket = functools.cache(_build_align_bucket_step)
+_cached_decode_packed = functools.cache(_build_decode_packed_step)
+
+
+class BucketRegistry:
+    """Shape-bucketed step registry for the serve engine.
+
+    Keys every jitted serving step on ``(cfg, ctx, kind, shape bucket)``:
+    decode widths from :func:`width_ladder`, prompt lengths from
+    :func:`length_ladder` (page-aligned in paged mode), shared-prefix
+    spans from a power-of-two page-count ladder.  The underlying builders
+    are process-global (``functools.cache``), so engines sharing a config
+    share compiled programs; per-registry instrumentation still sees
+    every *trace* this registry's calls trigger — each getter wraps its
+    step to compare the jit cache size around the call, recording a
+    ``TRACE_COMPILE`` profiler event (bucket kind, shape, wall time) in
+    :attr:`events` and bumping :attr:`compiles` when a shape actually
+    compiled.
+
+    ``bucketing=False`` degenerates to identity ladders — exact prompt
+    lengths, always-full decode width — turning the registry into a pure
+    compile counter for the fixed-shape baseline (benchmark E12).
+
+    Prompt length bucketing is disabled for configs with recurrent state
+    caches (ssm / rec): their prefill scans would fold the padded steps
+    into the carried state.  Width packing and dynamic alignment are
+    state-safe (rows move whole, padding rows are dropped) and stay on.
+    """
+
+    def __init__(self, cfg: M.ModelConfig, *, n_slots: int, budget: int,
+                 page_size: Optional[int] = None,
+                 prefill_cfg: Optional[M.ModelConfig] = None,
+                 ctx: Optional[ShardCtx] = None, bucketing: bool = True):
+        self.cfg = cfg
+        self.pcfg = prefill_cfg or cfg
+        self.ctx = ctx
+        self.n_slots = n_slots
+        self.budget = budget
+        self.page_size = page_size
+        self.bucketing = bool(bucketing)
+        has_state = any(kind in ("ssm", "rec")
+                        for kinds, _ in M.cache_layout(cfg)
+                        for kind in kinds)
+        self.len_bucketing = self.bucketing and not has_state
+        quantum = page_size if page_size else 8
+        self.widths = width_ladder(n_slots) if self.bucketing \
+            else (n_slots,)
+        self.lengths = length_ladder(quantum, budget) \
+            if self.len_bucketing else ()
+        self.compiles: Dict[str, int] = {}
+        self.events: list = []
+        self._wrapped: Dict[tuple, Any] = {}
+
+    # -- ladder lookups --------------------------------------------------
+    def width_bucket(self, n_active: int) -> int:
+        """Smallest ladder width covering ``n_active`` rows."""
+        for w in self.widths:
+            if w >= n_active:
+                return w
+        return self.n_slots
+
+    def len_bucket(self, length: int) -> int:
+        """Smallest ladder length covering ``length`` (identity when
+        length bucketing is off or the prompt outruns the ladder)."""
+        for b in self.lengths:
+            if b >= length:
+                return b
+        return length
+
+    def page_bucket(self, n_pages: int) -> int:
+        """Shared-prefix page-count bucket (next power of two)."""
+        if not self.len_bucketing or n_pages <= 0:
+            return n_pages
+        b = 1
+        while b < n_pages:
+            b *= 2
+        return b
+
+    # -- instrumentation -------------------------------------------------
+    def _get(self, kind: str, shape: tuple, builder, *bargs):
+        key = (kind,) + shape
+        fn = self._wrapped.get(key)
+        if fn is None:
+            fn = self._instrument(kind, shape, builder(*bargs))
+            self._wrapped[key] = fn
+        return fn
+
+    def _instrument(self, kind: str, shape: tuple, fn):
+        def call(*args, **kwargs):
+            before = fn._cache_size()
+            ev = Event("Compile", TRACE_COMPILE_EVENT,
+                       name=f"{TRACE_COMPILE_EVENT}:{kind}"
+                            f"{list(shape) if shape else ''}")
+            ev.mark_start()
+            out = fn(*args, **kwargs)
+            if fn._cache_size() > before:
+                ev.mark_end()
+                self.compiles[kind] = self.compiles.get(kind, 0) + 1
+                self.events.append(ev)
+            return out
+
+        return call
+
+    # -- bucketed steps --------------------------------------------------
+    def prefill(self, bucket_len: int):
+        return self._get("prefill", (bucket_len,), _cached_prefill_bucket,
+                         self.pcfg, self.ctx, bucket_len)
+
+    def prefill_ext(self, prefix_pad: int, tail_len: int):
+        return self._get("prefill_ext", (prefix_pad, tail_len),
+                         _cached_prefill_ext_bucket, self.pcfg, self.ctx,
+                         prefix_pad, tail_len)
+
+    def decode(self, width: int):
+        """Packed decode at ladder width ``width < n_slots`` (one builder;
+        jit retraces per width — the wrapper attributes the trace to the
+        width it was called at)."""
+        return self._get("decode", (width,), _cached_decode_packed,
+                         self.cfg, self.ctx)
+
+    def decode_full(self):
+        """The classic full-width decode step (no gather/scatter), used
+        when the covering bucket is ``n_slots`` itself."""
+        return self._get("decode", (self.n_slots,), _build_decode_step_of,
+                         self.cfg, self.ctx)
+
+    def align(self, ring_len: int, prefix_pad: int = 0):
+        return self._get("align", (ring_len, prefix_pad),
+                         _cached_align_bucket, self.cfg, ring_len,
+                         self.budget, self.page_size, prefix_pad)
+
+
+def _build_decode_step_of(cfg: M.ModelConfig, ctx: Optional[ShardCtx]):
+    # indirection so the registry shares the legacy decode jit (and its
+    # compiled programs) with make_decode_step callers
+    return _cached_decode(cfg, ctx)
+
+
 def _slot_index(leaf_ndim: int, slot, axis: int):
     # every index shares the slot's dtype (mixed int32/int64 indices are
     # a dynamic_slice error once x64 promotes the literal 0s)
@@ -274,6 +599,8 @@ def cache_slot_extract(batched: Dict, slot) -> Dict:
 
 
 __all__ = ["make_prefill_step", "make_decode_step", "make_prefill_ext_step",
-           "make_align_step", "align_prefill_cache", "cache_slot_insert",
-           "cache_slot_extract", "PREFILL_EVENT", "DECODE_EVENT",
-           "ALIGN_EVENT"]
+           "make_align_step", "align_prefill_cache",
+           "align_prefill_cache_dyn", "cache_slot_insert",
+           "cache_slot_extract", "BucketRegistry", "width_ladder",
+           "length_ladder", "PREFILL_EVENT", "DECODE_EVENT",
+           "ALIGN_EVENT", "TRACE_COMPILE_EVENT"]
