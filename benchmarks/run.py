@@ -80,6 +80,17 @@ def _merge_snapshot(path: pathlib.Path, update: dict) -> None:
     print(f"# wrote {path}", file=sys.stderr)
 
 
+def _latency_cols(eng) -> dict:
+    """p50/p99 TTFT and inter-token latency (engine ticks — deterministic
+    across backends) from a served engine's metrics registry; appended
+    to every serve scenario row."""
+    st = eng.stats
+    return {"ttft_ticks_p50": st.percentile("ttft_ticks", 50),
+            "ttft_ticks_p99": st.percentile("ttft_ticks", 99),
+            "tbt_ticks_p50": st.percentile("tbt_ticks", 50),
+            "tbt_ticks_p99": st.percentile("tbt_ticks", 99)}
+
+
 # ----------------------------------------------------------------- E1 ------
 
 def bench_loc_compare():
@@ -324,7 +335,7 @@ def bench_serve_throughput():
     def run_continuous():
         eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget)
         streams = eng.run(reqs)
-        return streams, eng.stats["decode_steps"]
+        return streams, eng.stats["decode_steps"], eng
 
     def run_static():
         prefill = make_prefill_step(cfg)
@@ -358,7 +369,7 @@ def bench_serve_throughput():
                         streams[r.rid].append(int(nxt[slot]))
                     toks[slot, 0] = int(nxt[slot])
                     pos[slot] += 1
-        return streams, steps
+        return streams, steps, None
 
     results = {"backend": jax.default_backend(),
                "trace": {"n_requests": len(reqs), "n_slots": n_slots,
@@ -368,14 +379,16 @@ def bench_serve_throughput():
                      ("continuous", run_continuous)]:
         fn()                                   # warmup (jit compile)
         t0 = time.perf_counter()
-        streams, steps = fn()
+        streams, steps, eng = fn()
         dt = time.perf_counter() - t0
         toks = sum(len(s) for s in streams.values())
         decoded = toks - len(reqs)             # first token is prefill's
         util = decoded / max(1, steps * n_slots)
-        results["rows"].append(
-            {"policy": name, "tokens": toks, "decode_steps": steps,
-             "tok_s": toks / dt, "slot_utilization": util, "wall_s": dt})
+        row = {"policy": name, "tokens": toks, "decode_steps": steps,
+               "tok_s": toks / dt, "slot_utilization": util, "wall_s": dt}
+        if eng is not None:         # lockstep baseline has no engine
+            row.update(_latency_cols(eng))
+        results["rows"].append(row)
         results[f"streams_{name}"] = {str(k): v
                                       for k, v in sorted(streams.items())}
         print(f"# serve {name}: {toks} tokens in {dt:.3f}s "
@@ -479,6 +492,7 @@ def bench_paged_vs_dense():
                "decode_steps": eng.stats["decode_steps"],
                "resident_kv_bytes": resident, "wall_s": dt,
                "preemptions": eng.stats["preemptions"]}
+        row.update(_latency_cols(eng))
         if paged:
             row["peak_pages_held"] = peak_pages
         out["rows"].append(row)
@@ -584,6 +598,7 @@ def bench_prefix_sharing():
                "prefix_hits": eng.stats["prefix_hits"],
                "cow_copies": eng.stats["cow_copies"],
                "peak_pages_held": peak_pages, "wall_s": dt}
+        row.update(_latency_cols(eng))
         out["rows"].append(row)
         streams_by[name] = streams
         print(f"# {name}: {toks} tokens, prefilled "
@@ -652,7 +667,7 @@ def bench_fault_overhead():
         eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget,
                           paged=True, page_size=4, guards=guards)
         streams = eng.run(reqs)
-        return streams, eng.stats["decoded_tokens"]
+        return streams, eng.stats["decoded_tokens"], eng
 
     out = {"backend": jax.default_backend(),
            "trace": {"n_requests": len(reqs), "n_slots": n_slots,
@@ -664,13 +679,14 @@ def bench_fault_overhead():
         best = None
         for _ in range(reps):
             t0 = time.perf_counter()
-            streams, decoded = serve(guards)
+            streams, decoded, eng = serve(guards)
             dt = time.perf_counter() - t0
             best = dt if best is None else min(best, dt)
         streams_by[name] = streams
         tok_s_by[name] = decoded / best
         out["rows"].append({"policy": name, "decoded_tokens": decoded,
-                            "tok_s": tok_s_by[name], "wall_s": best})
+                            "tok_s": tok_s_by[name], "wall_s": best,
+                            **_latency_cols(eng)})
         print(f"# {name}: {decoded} decode tokens in {best:.3f}s "
               f"({tok_s_by[name]:,.1f} tok/s)", file=sys.stderr)
         _emit(f"fault_overhead_{name}", best * 1e6,
@@ -739,7 +755,7 @@ def bench_elastic_batching():
                           n_slots=n_slots, budget=budget, buckets=buckets)
         streams = eng.run(reqs)
         return streams, eng.stats["decoded_tokens"], \
-            dict(eng.stats["compiles"])
+            dict(eng.stats["compiles"]), eng
 
     out = {"backend": jax.default_backend(),
            "trace": {"n_requests": len(lengths), "n_slots": n_slots,
@@ -752,12 +768,12 @@ def bench_elastic_batching():
         # run prices the compile storm (or its absence)
         cfg = dataclasses.replace(base, name=f"bench-elastic-{name}")
         t0 = time.perf_counter()
-        streams, decoded, compiles = serve(cfg, buckets)
+        streams, decoded, compiles, eng = serve(cfg, buckets)
         cold = time.perf_counter() - t0
         best = None
         for _ in range(reps):
             t0 = time.perf_counter()
-            streams, decoded, _ = serve(cfg, buckets)
+            streams, decoded, _, eng = serve(cfg, buckets)
             dt = time.perf_counter() - t0
             best = dt if best is None else min(best, dt)
         streams_by[name] = streams
@@ -767,7 +783,8 @@ def bench_elastic_batching():
                             "total_compiles": sum(compiles.values()),
                             "decoded_tokens": decoded,
                             "cold_wall_s": cold, "wall_s": best,
-                            "tok_s": tok_s_by[name]})
+                            "tok_s": tok_s_by[name],
+                            **_latency_cols(eng)})
         print(f"# {name}: compiles={compiles} cold={cold:.3f}s "
               f"warm {decoded} tokens in {best:.3f}s "
               f"({tok_s_by[name]:,.1f} tok/s)", file=sys.stderr)
@@ -794,6 +811,137 @@ def bench_elastic_batching():
         "tok_s_ratio": out["tok_s_ratio"]})
 
 
+# ----------------------------------------------------------------- E13 -----
+
+def bench_observability_overhead():
+    """Price of request-level tracing (spans, histograms, event linking).
+
+    The same Poisson trace is served by the paged engine — with pool
+    pressure, so the preemption/swap lifecycle states are exercised and
+    traced — once with ``tracing=False`` (counters only) and once with
+    the default ``tracing=True`` (span objects per lifecycle transition,
+    per-token DECODE spans, tick histograms, device-event linking).  No
+    behaviour may change: the streams must be byte-identical; the
+    measured gap is pure observability cost.  Best-of-reps decode
+    throughput; acceptance target < 2 % overhead (recorded as
+    ``tracing_lt_2pct``), lenient 10 % hard bound for noisy CI hosts.
+    The traced run must also produce at least one span per lifecycle
+    state the run exercised, with kernel events linked, and export
+    schema-valid Perfetto JSON.  Results land under the
+    ``observability_overhead`` key of BENCH_serve.json.
+    """
+    import jax
+    import numpy as np
+    from repro.models.model import ModelConfig, init_params
+    from repro.prof.export import export_perfetto
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = ModelConfig(name="bench-obs", family="dense", num_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=256, dtype="float32")
+    n_slots, budget, reps = 4, 48, 9
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    # mixed-length trace (near-budget prompts next to short chats): at
+    # 20 pool pages this oversubscribes the arena, so preemption and
+    # swap-in states are exercised and traced, not just the happy path
+    rng = np.random.default_rng(11)
+    arrivals = np.cumsum(rng.poisson(1.5, size=16))
+    reqs = []
+    for i, a in enumerate(arrivals):
+        L = int(rng.integers(4, 33))
+        n = int(rng.integers(4, min(17, budget - L + 1)))
+        reqs.append(Request(i, [int(t) for t in rng.integers(0, cfg.vocab,
+                                                             L)],
+                            n, arrival=int(a)))
+
+    def serve(tracing):
+        eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget,
+                          paged=True, page_size=4, pool_pages=20,
+                          tracing=tracing)
+        streams = eng.run(reqs)
+        return eng, streams
+
+    out = {"backend": jax.default_backend(),
+           "trace": {"n_requests": len(reqs), "n_slots": n_slots,
+                     "budget": budget, "pool_pages": 20, "reps": reps},
+           "rows": []}
+    modes = [("tracing_off", False), ("tracing_on", True)]
+    streams_by, tok_s_by, engs = {}, {}, {}
+    best = {name: None for name, _ in modes}
+    for _, tracing in modes:
+        serve(tracing)                          # warmup (jit compile)
+    # interleave the reps (off, on, off, on, …): a host-load drift then
+    # hits both modes alike instead of inflating whichever block ran
+    # second, and best-of-reps discards the disturbed pairs
+    for _ in range(reps):
+        for name, tracing in modes:
+            t0 = time.perf_counter()
+            eng, streams = serve(tracing)
+            dt = time.perf_counter() - t0
+            if best[name] is None or dt < best[name]:
+                best[name] = dt
+            engs[name], streams_by[name] = eng, streams
+    eng_on = engs["tracing_on"]
+    for name, tracing in modes:
+        decoded = engs[name].stats["decoded_tokens"]
+        tok_s_by[name] = decoded / best[name]
+        row = {"policy": name, "decoded_tokens": decoded,
+               "tok_s": tok_s_by[name], "wall_s": best[name]}
+        if tracing:
+            row.update(_latency_cols(engs[name]))
+        out["rows"].append(row)
+        print(f"# {name}: {decoded} decode tokens in {best[name]:.3f}s "
+              f"({tok_s_by[name]:,.1f} tok/s)", file=sys.stderr)
+        _emit(f"observability_overhead_{name}", best[name] * 1e6,
+              f"tok_s={tok_s_by[name]:.1f}")
+    out["streams_match"] = streams_by["tracing_off"] == \
+        streams_by["tracing_on"]
+    out["overhead_frac"] = max(
+        0.0, 1.0 - tok_s_by["tracing_on"] / tok_s_by["tracing_off"])
+    out["tracing_lt_2pct"] = out["overhead_frac"] < 0.02
+    print(f"# streams_match={out['streams_match']} tracing overhead "
+          f"{out['overhead_frac'] * 100:.2f}% "
+          f"(<2%: {out['tracing_lt_2pct']})", file=sys.stderr)
+    assert out["streams_match"], "tracing changed the streams!"
+    assert out["overhead_frac"] < 0.10, \
+        f"tracing costs {out['overhead_frac'] * 100:.1f}% decode tok/s"
+
+    # coverage: one span per lifecycle state the run exercised, every
+    # trace contiguous, kernel events linked into the spans
+    trace = eng_on.trace
+    kinds = {k.value for k in trace.span_kinds()}
+    expected = {"QUEUED", "PREFILL", "DECODE"}
+    if eng_on.stats["preemptions"]:
+        expected |= {"PREEMPTED"}
+    if eng_on.stats["swap_ins"]:
+        expected |= {"SWAP"}
+    assert expected <= kinds, f"missing span kinds: {expected - kinds}"
+    for rt in trace:
+        assert rt.contiguous(), f"rid {rt.rid}: non-contiguous spans"
+    linked = {e.name for rt in trace for s in rt.spans for e in s.events}
+    assert "PREFILL_KERNEL" in linked and "DECODE_KERNEL" in linked, \
+        f"kernel events not linked into spans: {linked}"
+    out["span_kinds"] = sorted(kinds)
+    out["linked_event_names"] = sorted(linked)
+
+    # export must be schema-valid Chrome trace_event JSON
+    doc = json.loads(export_perfetto(None, trace=trace))
+    assert all(k in e for e in doc["traceEvents"]
+               for k in ("ph", "ts", "pid", "tid"))
+    out["perfetto_events"] = len(doc["traceEvents"])
+    print(f"# span kinds {out['span_kinds']}, "
+          f"{out['perfetto_events']} perfetto events", file=sys.stderr)
+    _merge_snapshot(ROOT / "BENCH_serve.json",
+                    {"observability_overhead": out})
+    _history_append("observability_overhead", {
+        "rows": out["rows"], "streams_match": out["streams_match"],
+        "overhead_frac": out["overhead_frac"],
+        "tracing_lt_2pct": out["tracing_lt_2pct"],
+        "span_kinds": out["span_kinds"]})
+
+
 BENCHES = {
     "loc_compare": bench_loc_compare,
     "overhead": bench_overhead,
@@ -807,6 +955,7 @@ BENCHES = {
     "prefix_sharing": bench_prefix_sharing,
     "fault_overhead": bench_fault_overhead,
     "elastic_batching": bench_elastic_batching,
+    "observability_overhead": bench_observability_overhead,
 }
 
 

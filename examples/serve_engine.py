@@ -11,6 +11,11 @@ the paper's two-queue pattern applied to mixed-depth inference traffic.
 For the lockstep-batch reference driver see ``serve_decode.py``.
 
 Run:  PYTHONPATH=src python examples/serve_engine.py --requests 8
+
+``--metrics`` prints the end-of-run metrics registry (latency
+percentiles in ticks, counters, gauges) plus the per-request span
+Gantt; ``--trace out.json`` writes the merged device+request timeline
+in Chrome ``trace_event`` format — load it at ``ui.perfetto.dev``.
 """
 
 import argparse
@@ -22,7 +27,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core.errors import err_string
 from repro.models.model import init_params
-from repro.prof import Prof, compile_summary, queue_chart
+from repro.prof import (Prof, compile_summary, export_perfetto,
+                        queue_chart, render_request_gantt)
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -70,6 +76,13 @@ def main() -> int:
                     help="eagerly compile the bucket ladders before "
                          "serving (compile hits land up front, not on "
                          "first use)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the merged device+request timeline as "
+                         "Chrome/Perfetto trace_event JSON")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the end-of-run metrics table (latency "
+                         "percentiles, counters, gauges) and the "
+                         "per-request span Gantt")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -112,18 +125,26 @@ def main() -> int:
         print(line)
     st = eng.stats
     util = st["decoded_tokens"] / max(1, st["decode_steps"] * args.slots)
-    print(f"\n{eng.tick} ticks, {st['prefills']} prefills, "
-          f"{st['decode_steps']} decode steps, "
-          f"{st['decoded_tokens']} decoded tokens "
-          f"(slot utilization {util:.2f}), {st['failures']} failed")
-    if args.paged:
-        print(f"paged pool: {st['preemptions']} preemptions, "
-              f"{st['swap_ins']} swap-ins, resident KV "
-              f"{eng.cache_mgr.resident_bytes():,} bytes")
-        print(f"prefix sharing: {st['prefix_hits']} hits, "
-              f"{st['shared_tokens']} shared of "
-              f"{st['shared_tokens'] + st['prefill_tokens']} prompt "
-              f"tokens, {st['cow_copies']} CoW copies")
+    if args.metrics:
+        # full registry view: tick-based latency percentiles, gauges
+        # with their high-water marks, and every counter
+        print(f"\n{eng.tick} ticks, slot utilization {util:.2f}")
+        print(eng.metrics.render(), end="")
+        if args.paged:
+            print(f"resident KV {eng.cache_mgr.resident_bytes():,} bytes")
+    else:
+        print(f"\n{eng.tick} ticks, {st['prefills']} prefills, "
+              f"{st['decode_steps']} decode steps, "
+              f"{st['decoded_tokens']} decoded tokens "
+              f"(slot utilization {util:.2f}), {st['failures']} failed")
+        if args.paged:
+            print(f"paged pool: {st['preemptions']} preemptions, "
+                  f"{st['swap_ins']} swap-ins, resident KV "
+                  f"{eng.cache_mgr.resident_bytes():,} bytes")
+            print(f"prefix sharing: {st['prefix_hits']} hits, "
+                  f"{st['shared_tokens']} shared of "
+                  f"{st['shared_tokens'] + st['prefill_tokens']} prompt "
+                  f"tokens, {st['cow_copies']} CoW copies")
 
     compiles = " ".join(f"{k}={v}" for k, v in st["compiles"].items())
     print(f"jit compiles ({'bucketed' if args.buckets else 'exact shapes'})"
@@ -136,6 +157,11 @@ def main() -> int:
     print(prof.get_summary())
     print(compile_summary(prof), end="")
     print(queue_chart(prof, width=80))
+    if args.metrics:
+        print(render_request_gantt(eng.trace, width=80))
+    if args.trace:
+        export_perfetto(args.trace, prof=prof, trace=eng.trace)
+        print(f"perfetto trace written to {args.trace}")
     return 0
 
 

@@ -3,6 +3,9 @@ profile table (paper Fig. 5), rendered as ASCII.
 
 Usage:
     PYTHONPATH=src python -m repro.cli.plot_events profile.tsv [--width 120]
+
+``--perfetto OUT.json`` additionally converts the table to Chrome
+``trace_event`` JSON (one device track per queue) for ``ui.perfetto.dev``.
 """
 
 from __future__ import annotations
@@ -11,17 +14,23 @@ import argparse
 import pathlib
 import sys
 
-from ..prof.export import parse_table, render_queue_chart
+from ..prof.export import export_perfetto, parse_table, render_queue_chart
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description="queue utilization chart")
     ap.add_argument("table", help="TSV exported by prof.export_table")
     ap.add_argument("--width", type=int, default=100)
+    ap.add_argument("--perfetto", metavar="OUT", default=None,
+                    help="also write the table as Chrome/Perfetto "
+                         "trace_event JSON")
     args = ap.parse_args(argv)
     text = pathlib.Path(args.table).read_text()
     rows = parse_table(text)
     print(render_queue_chart(rows, width=args.width))
+    if args.perfetto:
+        export_perfetto(args.perfetto, table_rows=rows)
+        print(f"perfetto trace written to {args.perfetto}")
     return 0
 
 

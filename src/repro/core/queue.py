@@ -234,6 +234,13 @@ class DispatchQueue(Wrapper):
         with self._lock:
             return list(self._events)
 
+    def last_event(self) -> Optional[Event]:
+        """Most recently recorded submission event — what a caller links
+        into a request span right after its ``enqueue`` (None when
+        profiling is off or nothing was submitted yet)."""
+        with self._lock:
+            return self._events[-1] if self._events else None
+
     def reset_events(self) -> None:
         with self._lock:
             self._events.clear()

@@ -49,7 +49,8 @@ chaos experiment is deterministic end to end.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, Optional, Sequence as Seq, Set, Tuple
+from typing import (Dict, FrozenSet, List, Optional, Sequence as Seq, Set,
+                    Tuple)
 
 import numpy as np
 
@@ -120,10 +121,17 @@ class FaultPlan:
         self._growth_pending: Set[int] = set(self.growth_oom)
         self._lane_seen: Dict[Tuple[str, str], int] = {}
         self._lane_idx: Dict[Tuple[str, str], int] = {}
+        # injection log: one tuple per fault that actually fired, in
+        # firing order — lines up with the engine trace's FAILED markers
+        # and replays identically across engines (reset clears it)
+        self.fired: List[Tuple] = []
 
     # -- injection seams (called by the engine / queue) ------------------
     def admission_oom(self, rid: int) -> bool:
-        return rid in self.admit_oom
+        if rid in self.admit_oom:
+            self.fired.append(("admission_oom", rid))
+            return True
+        return False
 
     def take_growth_oom(self, tick: int) -> bool:
         """True exactly once per planned tick (a forced ``prepare_write``
@@ -131,6 +139,7 @@ class FaultPlan:
         preempting)."""
         if tick in self._growth_pending:
             self._growth_pending.discard(tick)
+            self.fired.append(("growth_oom", tick))
             return True
         return False
 
@@ -141,6 +150,7 @@ class FaultPlan:
         if rows:
             lg = lg.copy()
             lg[rows, :] = np.nan
+            self.fired.append(("corrupt_logits", tick, tuple(sorted(rows))))
         return lg
 
     def lane_fault(self, lane: str, event: str, attempt: int) -> None:
@@ -158,6 +168,7 @@ class FaultPlan:
         for f in self.lane_faults:
             if (f.lane == lane and f.event == event and f.index == idx
                     and attempt < f.fails):
+                self.fired.append(("lane_fault", lane, event, idx, attempt))
                 raise InjectedFault(
                     f"injected: {lane}/{event}#{idx} attempt {attempt}")
 

@@ -5,14 +5,27 @@ cf4ocl exports a 4-column table (queue, start, end, name) consumable by the
 export the same table (tab-separated) and render the chart directly as
 ASCII (one row per queue, one glyph per time bucket), since the container
 has no display.  The CSV is also written so external tools can plot it.
+
+**Perfetto export** (:func:`perfetto_trace` / :func:`export_perfetto`):
+one Chrome ``trace_event``-format JSON timeline merging the *device*
+view and the *request* view — pid 1 holds one track per
+:class:`~repro.core.queue.DispatchQueue` (plus the ``Compile`` lane's
+``TRACE_COMPILE`` markers), pid 2 holds one track per request carrying
+its typed lifecycle spans (``prof.trace``), with CoW/FAILED markers as
+instant events.  Load the file at ``ui.perfetto.dev`` or
+``chrome://tracing``; :func:`render_request_gantt` is the display-less
+ASCII analogue of the request half, as :func:`render_queue_chart` is of
+the device half.
 """
 
 from __future__ import annotations
 
 import io
+import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .profiler import Prof, ProfInfo
+from .trace import SpanKind, TraceCollector
 
 
 def export_table(prof: Prof, path: Optional[str] = None, sep: str = "\t"
@@ -32,7 +45,10 @@ def parse_table(text: str, sep: str = "\t") -> List[Tuple[str, int, int, str]]:
     for line in text.splitlines():
         if not line.strip():
             continue
-        q, s, e, n = line.split(sep)
+        # split on exactly 3 separators: the name column (rightmost) may
+        # itself contain the separator (e.g. "TRACE_COMPILE:prefill[16]"
+        # exported with sep=":") and must round-trip intact
+        q, s, e, n = line.split(sep, 3)
         out.append((q, int(s), int(e), n))
     return out
 
@@ -102,5 +118,153 @@ def compile_summary(prof: Prof) -> str:
     return buf.getvalue()
 
 
+# ------------------------------------------------- Perfetto export --------
+
+# Chrome trace_event process ids: one per view
+DEVICE_PID = 1      # one thread (tid) per DispatchQueue / event lane
+REQUEST_PID = 2     # one thread (tid) per request (tid == rid)
+
+
+def _meta(pid: int, tid: int, what: str, name: str) -> Dict:
+    # every event carries ph/ts/pid/tid so schema checks stay uniform
+    return {"name": what, "ph": "M", "ts": 0, "pid": pid, "tid": tid,
+            "args": {"name": name}}
+
+
+def perfetto_trace(prof: Optional[Prof] = None,
+                   trace: Optional[TraceCollector] = None,
+                   table_rows: Optional[
+                       Sequence[Tuple[str, int, int, str]]] = None) -> Dict:
+    """Build a Chrome/Perfetto ``trace_event`` JSON object merging the
+    device-event lanes (``prof`` — one track per queue, compile markers
+    riding their ``Compile`` lane) with per-request span tracks
+    (``trace``).  ``table_rows`` feeds the device side from a parsed
+    4-column export instead of a live profiler (the ``plot_events`` CLI
+    path).  Any argument may be None; timestamps are rebased so the
+    timeline starts at 0 µs.
+
+    Span complete-events (``ph: "X"``) carry ``ts``/``dur`` in µs plus
+    ``args`` with the tick coordinates, the token index, and the names +
+    serials of the linked device events; COW/FAILED markers become
+    instant events (``ph: "i"``)."""
+    device: List[Tuple[str, int, int, str]] = []
+    if prof is not None:
+        device += [(i.queue, i.t_start, i.t_end, i.name)
+                   for i in prof.iter_infos()]
+    if table_rows:
+        device += [tuple(r) for r in table_rows]
+
+    t_min: Optional[int] = None
+    for _, s, _, _ in device:
+        t_min = s if t_min is None else min(t_min, s)
+    if trace is not None:
+        rng = trace.time_range_ns()
+        if rng is not None:
+            t_min = rng[0] if t_min is None else min(t_min, rng[0])
+    base = t_min or 0
+
+    def us(ns: int) -> float:
+        return (ns - base) / 1e3
+
+    events: List[Dict] = []
+    events.append(_meta(DEVICE_PID, 0, "process_name", "device queues"))
+    events.append(_meta(REQUEST_PID, 0, "process_name", "requests"))
+
+    queue_tid: Dict[str, int] = {}
+    for q, s, e, n in device:
+        tid = queue_tid.get(q)
+        if tid is None:
+            tid = queue_tid[q] = len(queue_tid) + 1
+            events.append(_meta(DEVICE_PID, tid, "thread_name", q))
+        events.append({"name": n, "cat": "device", "ph": "X",
+                       "ts": us(s), "dur": max(0.0, (e - s) / 1e3),
+                       "pid": DEVICE_PID, "tid": tid,
+                       "args": {"queue": q}})
+
+    if trace is not None:
+        for rt in trace:
+            events.append(_meta(REQUEST_PID, rt.rid, "thread_name",
+                                f"req {rt.rid}"))
+            for sp in rt.spans:
+                args = {"tick0": sp.tick0, "tick1": sp.tick1,
+                        "events": [e.name for e in sp.events],
+                        "event_ids": [e._raw[1] for e in sp.events]}
+                if sp.token_index is not None:
+                    args["token_index"] = sp.token_index
+                if sp.detail:
+                    args["detail"] = sp.detail
+                if not sp.kind.lifecycle:
+                    events.append({"name": sp.kind.value, "cat": "request",
+                                   "ph": "i", "s": "t", "ts": us(sp.t0),
+                                   "pid": REQUEST_PID, "tid": rt.rid,
+                                   "args": args})
+                else:
+                    t1 = sp.t1 if sp.t1 is not None else sp.t0
+                    events.append({"name": sp.kind.value, "cat": "request",
+                                   "ph": "X", "ts": us(sp.t0),
+                                   "dur": max(0.0, (t1 - sp.t0) / 1e3),
+                                   "pid": REQUEST_PID, "tid": rt.rid,
+                                   "args": args})
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def export_perfetto(path: Optional[str],
+                    prof: Optional[Prof] = None,
+                    trace: Optional[TraceCollector] = None,
+                    table_rows: Optional[
+                        Sequence[Tuple[str, int, int, str]]] = None) -> str:
+    """Serialize :func:`perfetto_trace` to JSON, optionally writing it to
+    ``path``; returns the JSON text."""
+    text = json.dumps(perfetto_trace(prof, trace, table_rows))
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+_SPAN_GLYPHS = {SpanKind.QUEUED: ".", SpanKind.PREFILL: "P",
+                SpanKind.DECODE: "#", SpanKind.PREEMPTED: "x",
+                SpanKind.SWAP: "s", SpanKind.COW: "c",
+                SpanKind.FAILED: "!"}
+
+
+def render_request_gantt(trace: TraceCollector, width: int = 100) -> str:
+    """ASCII per-request Gantt — the request-side analogue of
+    :func:`render_queue_chart`: one lane per rid, one glyph per span
+    kind, markers overdrawn at their instant."""
+    rng = trace.time_range_ns()
+    if rng is None:
+        return "(no request spans)"
+    t0, t1 = rng
+    span = max(1, t1 - t0)
+
+    def cell(ns: int) -> int:
+        return int((ns - t0) / span * (width - 1))
+
+    buf = io.StringIO()
+    buf.write(f"time span: {span / 1e9:.6f}s  "
+              f"({span / width / 1e6:.3f} ms/cell)\n")
+    rids = sorted(rt.rid for rt in trace)
+    w = max(len(f"req {r}") for r in rids)
+    for rt in sorted(trace, key=lambda rt: rt.rid):
+        lane = [" "] * width
+        for sp in rt.spans:                     # lifecycle first...
+            if not sp.kind.lifecycle:
+                continue
+            c1 = cell(sp.t1 if sp.t1 is not None else t1)
+            for c in range(cell(sp.t0), c1 + 1):
+                lane[c] = _SPAN_GLYPHS[sp.kind]
+        for sp in rt.spans:                     # ...markers overdraw
+            if sp.kind.lifecycle:
+                continue
+            lane[cell(sp.t0)] = _SPAN_GLYPHS[sp.kind]
+        buf.write(f"{f'req {rt.rid}':>{w}s} |{''.join(lane)}|\n")
+    buf.write("\nlegend: " + "  ".join(
+        f"{g}={k.value}" for k, g in _SPAN_GLYPHS.items()) + "\n")
+    return buf.getvalue()
+
+
 __all__ = ["export_table", "parse_table", "render_queue_chart",
-           "queue_chart", "compile_summary"]
+           "queue_chart", "compile_summary", "perfetto_trace",
+           "export_perfetto", "render_request_gantt",
+           "DEVICE_PID", "REQUEST_PID"]

@@ -1,0 +1,267 @@
+"""Serve metrics registry — counters, gauges, fixed-bucket histograms.
+
+cf4ocl's profiler answers "what did the *device* do" (queue event
+timelines, §4.3); this registry answers "what did each *request*
+experience" — TTFT, per-token inter-arrival latency, queue wait,
+deadline margin — plus fleet counters (preemptions, CoW copies,
+failures) and gauges (pool occupancy, queue depth).
+
+Determinism contract: every latency metric is recorded in **engine
+ticks**, never wall time.  Ticks are a pure function of the trace and
+the scheduling policy, so two runs of the same trace on different
+numeric backends (xla vs pallas-interpret) produce *identical*
+snapshots — which the conformance suite asserts.  Wall-clock instants
+exist only on the span/event side (``now_ns``), where they feed the
+timeline export, never a metric.
+
+Histograms use fixed integer bucket bounds (:data:`DEFAULT_TICK_BUCKETS`
+— unit-width up to 64 then geometric), so ``percentile(p)`` is
+deterministic: it returns the upper bound of the bucket containing the
+rank-``⌈p·n/100⌉`` observation (exact for values ≤ 64; the overflow
+bucket reports the observed max).  No sample reservoir, no
+interpolation — a snapshot is a pure fold over the observations.
+
+:class:`StatsView` adapts a registry (plus live extra entries, e.g. the
+engine's compile-count dict) to the read-only ``Mapping`` interface the
+engine's legacy ``stats`` dict exposed, so ``eng.stats["preemptions"]``
+keeps working while ``eng.stats.percentile("ttft_ticks", 99)`` becomes
+available.
+"""
+
+from __future__ import annotations
+
+import bisect
+import io
+from typing import Callable, Dict, Iterator, Mapping, Optional, Tuple, Union
+
+_GEOMETRIC = (96, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048, 3072,
+              4096, 6144, 8192, 12288, 16384, 32768, 65536, 131072,
+              1 << 20)
+# unit-width buckets up to 64 ticks (exact percentiles in the regime the
+# serve benches live in), then a coarse geometric tail
+DEFAULT_TICK_BUCKETS: Tuple[int, ...] = tuple(range(65)) + _GEOMETRIC
+
+
+class Counter:
+    """Monotonic integer counter."""
+
+    __slots__ = ("name", "unit", "value")
+
+    def __init__(self, name: str, unit: str = "count"):
+        self.name = name
+        self.unit = unit
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-value gauge; remembers its high-water mark."""
+
+    __slots__ = ("name", "unit", "value", "vmax")
+
+    def __init__(self, name: str, unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.value = 0
+        self.vmax = 0
+
+    def set(self, v: int) -> None:
+        self.value = v
+        if v > self.vmax:
+            self.vmax = v
+
+
+class Histogram:
+    """Fixed-bucket integer histogram with deterministic percentiles.
+
+    ``bounds`` are inclusive upper edges; an observation lands in the
+    first bucket whose bound covers it, values past the last bound land
+    in the overflow bucket.  Negative observations clamp to 0 (latency
+    semantics)."""
+
+    __slots__ = ("name", "unit", "bounds", "counts", "overflow", "n",
+                 "total", "vmin", "vmax")
+
+    def __init__(self, name: str, unit: str = "ticks",
+                 bounds: Tuple[int, ...] = DEFAULT_TICK_BUCKETS):
+        assert bounds == tuple(sorted(bounds)), "bounds must be ascending"
+        self.name = name
+        self.unit = unit
+        self.bounds = bounds
+        self.counts = [0] * len(bounds)
+        self.overflow = 0
+        self.n = 0
+        self.total = 0
+        self.vmin: Optional[int] = None
+        self.vmax: Optional[int] = None
+
+    def observe(self, v: Union[int, float]) -> None:
+        v = max(0, int(v))
+        i = bisect.bisect_left(self.bounds, v)
+        if i < len(self.bounds):
+            self.counts[i] += 1
+        else:
+            self.overflow += 1
+        self.n += 1
+        self.total += v
+        self.vmin = v if self.vmin is None else min(self.vmin, v)
+        self.vmax = v if self.vmax is None else max(self.vmax, v)
+
+    def percentile(self, p: float) -> Optional[int]:
+        """Upper bound of the bucket holding the p-th percentile
+        observation (None when empty)."""
+        if self.n == 0:
+            return None
+        rank = max(1, -(-int(p * self.n) // 100))   # ceil(p*n/100), ≥ 1
+        cum = 0
+        for bound, c in zip(self.bounds, self.counts):
+            cum += c
+            if cum >= rank:
+                # clamp coarse-bucket bounds to the observed max (exact
+                # for values inside the unit-width region)
+                return min(bound, self.vmax)
+        return self.vmax                             # overflow bucket
+
+    def summary(self) -> Dict[str, Optional[int]]:
+        return {"count": self.n, "total": self.total, "min": self.vmin,
+                "max": self.vmax, "p50": self.percentile(50),
+                "p99": self.percentile(99)}
+
+
+class MetricsRegistry:
+    """Named counters, gauges and histograms with get-or-create
+    registration and a uniform read API (``value`` / ``snapshot`` /
+    ``percentile``)."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    # -- registration ----------------------------------------------------
+    def counter(self, name: str, unit: str = "count") -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            assert name not in self._gauges and name not in self._hists, \
+                f"metric name collision: {name!r}"
+            c = self._counters[name] = Counter(name, unit)
+        return c
+
+    def gauge(self, name: str, unit: str = "") -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            assert name not in self._counters and name not in self._hists, \
+                f"metric name collision: {name!r}"
+            g = self._gauges[name] = Gauge(name, unit)
+        return g
+
+    def histogram(self, name: str, unit: str = "ticks",
+                  bounds: Tuple[int, ...] = DEFAULT_TICK_BUCKETS
+                  ) -> Histogram:
+        h = self._hists.get(name)
+        if h is None:
+            assert name not in self._counters and name not in self._gauges, \
+                f"metric name collision: {name!r}"
+            h = self._hists[name] = Histogram(name, unit, bounds)
+        return h
+
+    # -- recording -------------------------------------------------------
+    def inc(self, name: str, n: int = 1) -> None:
+        self._counters[name].inc(n)
+
+    def set_gauge(self, name: str, v: int) -> None:
+        self._gauges[name].set(v)
+
+    def observe(self, name: str, v: Union[int, float]) -> None:
+        self._hists[name].observe(v)
+
+    # -- reading ---------------------------------------------------------
+    def names(self) -> Iterator[str]:
+        yield from self._counters
+        yield from self._gauges
+        yield from self._hists
+
+    def value(self, name: str):
+        """Counter/gauge value, or a histogram's summary dict."""
+        if name in self._counters:
+            return self._counters[name].value
+        if name in self._gauges:
+            return self._gauges[name].value
+        return self._hists[name].summary()           # KeyError if unknown
+
+    def percentile(self, name: str, p: float) -> Optional[int]:
+        return self._hists[name].percentile(p)
+
+    def snapshot(self) -> Dict[str, object]:
+        """One plain-data dict of every metric's current value (histogram
+        entries are summary dicts) — deterministic for tick-based
+        metrics, so backend-parity tests compare snapshots directly."""
+        return {name: self.value(name) for name in self.names()}
+
+    def render(self) -> str:
+        """Aligned end-of-run table: histograms with percentiles first,
+        then gauges (value/peak), then non-zero counters."""
+        buf = io.StringIO()
+        rows = []
+        for h in self._hists.values():
+            if h.n == 0:
+                continue
+            rows.append((h.name, f"p50={h.percentile(50)} "
+                                 f"p99={h.percentile(99)} max={h.vmax} "
+                                 f"(n={h.n}, {h.unit})"))
+        for g in self._gauges.values():
+            rows.append((g.name, f"{g.value} (peak {g.vmax})"))
+        for c in self._counters.values():
+            rows.append((c.name, str(c.value)))
+        if not rows:
+            return "(no metrics recorded)\n"
+        w = max(len(n) for n, _ in rows)
+        for n, v in rows:
+            buf.write(f"{n:<{w}s}  {v}\n")
+        return buf.getvalue()
+
+
+class StatsView(Mapping):
+    """Read-only ``Mapping`` over a :class:`MetricsRegistry` plus live
+    extra entries.
+
+    Extras map a key to either a plain object returned as-is (e.g. the
+    engine's live compile-count dict) or a zero-arg callable evaluated
+    per read (e.g. summed lane retries).  Keeps the engine's legacy
+    ``stats[...]`` subscript API while adding ``snapshot()`` and
+    ``percentile(name, p)``."""
+
+    def __init__(self, registry: MetricsRegistry,
+                 extras: Optional[Dict[str, object]] = None):
+        self._registry = registry
+        self._extras = extras or {}
+
+    def __getitem__(self, key: str):
+        if key in self._extras:
+            v = self._extras[key]
+            return v() if callable(v) else v
+        return self._registry.value(key)
+
+    def __iter__(self) -> Iterator[str]:
+        yield from self._registry.names()
+        yield from self._extras
+
+    def __len__(self) -> int:
+        return len(list(self._registry.names())) + len(self._extras)
+
+    def percentile(self, name: str, p: float) -> Optional[int]:
+        return self._registry.percentile(name, p)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Plain-data copy of every entry (extras copied shallowly)."""
+        out = self._registry.snapshot()
+        for key in self._extras:
+            v = self[key]
+            out[key] = dict(v) if isinstance(v, dict) else v
+        return out
+
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
+           "DEFAULT_TICK_BUCKETS"]

@@ -417,6 +417,12 @@ class PagedCacheManager:
     def pages_held(self) -> Dict[str, int]:
         return {kind: a.n_held for kind, a in self.alloc.items()}
 
+    def occupancy(self) -> Dict[str, float]:
+        """Per-kind held fraction of the arena (0.0–1.0) — the pool
+        occupancy the serve metrics gauge reports."""
+        return {kind: a.n_held / a.capacity
+                for kind, a in self.alloc.items()}
+
     def resident_bytes(self) -> int:
         """K/V bytes of the standing arenas (the pool's real footprint)."""
         return P.kv_resident_bytes(self.cache)

@@ -108,6 +108,22 @@ bucket) and is disabled automatically for recurrent-state configs
 decode (one retrace per distinct prompt length — the fixed-shape
 baseline benchmark E12 prices against the ladder).
 
+**Observability** (``tracing=True``, the default; DESIGN.md
+"Observability"): every sequence carries a trace of typed lifecycle
+spans (``prof.trace`` — QUEUED/PREFILL/DECODE-per-token/PREEMPTED/SWAP
+plus COW/FAILED markers) emitted at the seams above, each linked to the
+device :class:`~repro.core.event.Event` objects that served it, and a
+:class:`~repro.prof.metrics.MetricsRegistry` records tick-based latency
+histograms (TTFT, inter-token, queue wait, deadline margin, end-to-end)
+and per-tick gauges.  ``engine.stats`` is a live
+:class:`~repro.prof.metrics.StatsView` over the registry — the legacy
+``stats["preemptions"]``-style reads keep working, and
+``stats.percentile("ttft_ticks", 99)`` / ``stats.snapshot()`` expose
+the SLO numbers benches report.  ``tracing=False`` skips span objects,
+histogram observations and event linking (counters stay on — they are
+the stats surface); benchmark E13 prices the difference at < 2 % decode
+tok/s with byte-identical streams.
+
 Simplifications (documented, not accidental): greedy sampling unless a
 ``sample_fn`` is supplied; one prefill per admission; the per-tick host
 sync to read sampled tokens is the streaming boundary.  Cross-attention
@@ -124,8 +140,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core import Context, DispatchQueue
-from ...core.errors import Code, ReproError
+from ...core.errors import Code, ReproError, err_string
 from ...models import model as M
+from ...prof.metrics import MetricsRegistry, StatsView
+from ...prof.trace import SpanKind, TraceCollector
 from .. import paging as P
 from ..step import (ALIGN_EVENT, DECODE_EVENT, PREFILL_EVENT,
                     BucketRegistry)
@@ -144,6 +162,20 @@ SCRUB_EVENT = "PAGE_SCRUB"
 PREFIX_GATHER_EVENT = "PREFIX_GATHER"
 COW_EVENT = "PAGE_COW"
 
+# -- the serve metric name registry (stable strings; see DESIGN.md
+# "Observability" for the documented semantics of each) ------------------
+# monotonic counters (unit: count) — always recorded, tracing on or off
+COUNTER_METRICS = ("decode_steps", "decoded_tokens", "prefills",
+                   "preemptions", "swap_ins", "prefill_tokens",
+                   "shared_tokens", "prefix_hits", "cow_copies",
+                   "failures", "compiles_total")
+# tick-based latency histograms (unit: engine ticks — deterministic,
+# identical across numeric backends); recorded only while tracing
+HISTOGRAM_METRICS = ("ttft_ticks", "tbt_ticks", "queue_wait_ticks",
+                     "deadline_margin_ticks", "e2e_ticks")
+# per-tick gauges (last value + high-water mark); recorded while tracing
+GAUGE_METRICS = ("active_slots", "queue_depth", "pool_pages_held")
+
 
 class ServeEngine:
     def __init__(self, cfg: M.ModelConfig, params, *, n_slots: int = 4,
@@ -157,7 +189,8 @@ class ServeEngine:
                  buckets: bool = True,
                  fault_plan=None,
                  max_submission_retries: int = 2,
-                 submission_backoff_s: float = 0.0):
+                 submission_backoff_s: float = 0.0,
+                 tracing: bool = True):
         """``budget`` is the decode position budget: prompt length + new
         tokens of any request must fit in it.  ``prefill_impl`` overrides
         ``cfg.attn_impl`` for prefill only (e.g. decode on the fused
@@ -185,7 +218,13 @@ class ServeEngine:
         faults exercise every failure path.  Lane submissions are
         retried up to ``max_submission_retries`` times with exponential
         ``submission_backoff_s`` backoff before a structured
-        ``SUBMISSION_FAILURE`` surfaces."""
+        ``SUBMISSION_FAILURE`` surfaces.
+
+        ``tracing`` (on by default) emits per-request lifecycle spans
+        (``engine.trace``), links them to the device events that served
+        them, and records the tick-based latency histograms/gauges;
+        turning it off keeps only the counters (benchmark E13 prices the
+        difference — byte-identical streams either way)."""
         assert not cfg.has_cross, \
             "serve engine does not support cross-attention models"
         self.cfg = cfg
@@ -236,12 +275,24 @@ class ServeEngine:
         self._slot_seq: Dict[int, Sequence] = {}
         self.sequences: List[Sequence] = []
         self.tick = 0       # == ticks elapsed; steps/tokens in stats
-        self.stats = {"decode_steps": 0, "decoded_tokens": 0,
-                      "prefills": 0, "preemptions": 0, "swap_ins": 0,
-                      "prefill_tokens": 0, "shared_tokens": 0,
-                      "prefix_hits": 0, "cow_copies": 0, "failures": 0,
-                      # live view: the registry mutates this dict in place
-                      "compiles": self._registry.compiles}
+        self.tracing = bool(tracing)
+        self.metrics = MetricsRegistry()
+        for name in COUNTER_METRICS:
+            self.metrics.counter(name)
+        for name in HISTOGRAM_METRICS:
+            self.metrics.histogram(name, unit="ticks")
+        for name in GAUGE_METRICS:
+            self.metrics.gauge(name)
+        self._registry.on_compile = \
+            lambda kind: self.metrics.inc("compiles_total")
+        self.trace = TraceCollector() if self.tracing else None
+        self._n_compile_seen = 0    # TRACE_COMPILE link cursor
+        # legacy stats surface: a live Mapping over the registry plus the
+        # registry-owned compile dict and the lanes' absorbed retries
+        self.stats = StatsView(self.metrics, {
+            "compiles": self._registry.compiles,
+            "lane_retries": lambda:
+                self.q_admit.retries + self.q_decode.retries})
 
     @property
     def compile_events(self):
@@ -249,6 +300,24 @@ class ServeEngine:
         registry (one per shape that actually compiled) — inject into a
         profiler with ``prof.add_events("Compile", eng.compile_events)``."""
         return self._registry.events
+
+    def _link(self, seq: Sequence, queue: DispatchQueue) -> None:
+        """Attach ``queue``'s most recent submission event to ``seq``'s
+        open span — call right after the enqueue it belongs to (an
+        enqueue may raise mid-admission, so never link speculatively)."""
+        if self.trace is not None:
+            ev = queue.last_event()
+            if ev is not None:
+                self.trace.link(seq.rid, ev)
+
+    def _drain_compiles(self):
+        """``TRACE_COMPILE`` events recorded since the last drain —
+        warmup advances the cursor past its own compiles so pre-traffic
+        compilation is never attributed to the first request."""
+        evs = self._registry.events
+        new = evs[self._n_compile_seen:]
+        self._n_compile_seen = len(evs)
+        return new
 
     def warmup(self) -> None:
         """Eagerly compile the bucket ladders (optional): every decode
@@ -274,6 +343,7 @@ class ServeEngine:
                                      jnp.zeros((1, Lb), jnp.int32),
                                      jnp.int32(1))
             reg.align(Lb)(one, jnp.int32(1), jnp.int32(0))
+        self._n_compile_seen = len(self._registry.events)
 
     # -- client side -----------------------------------------------------
     def submit(self, request: Request) -> Sequence:
@@ -285,6 +355,8 @@ class ServeEngine:
                 f"{self.budget}")
         seq = self.scheduler.submit(request)
         seq.submitted_at = self.tick
+        if self.trace is not None:
+            self.trace.begin(seq.rid, self.tick)
         self.sequences.append(seq)
         return seq
 
@@ -296,11 +368,19 @@ class ServeEngine:
     def _retire(self, seq: Sequence) -> None:
         seq.status = Status.FINISHED
         seq.finished_at = self.tick
+        if self.tracing:
+            e2e = self.tick - seq.submitted_at
+            self.metrics.observe("e2e_ticks", e2e)
+            if seq.request.deadline_ticks is not None:
+                self.metrics.observe("deadline_margin_ticks",
+                                     max(0, seq.request.deadline_ticks - e2e))
         self._release_slot(seq.slot)
+        if self.trace is not None:
+            self.trace.close(seq.rid, self.tick)
 
     def _release_slot(self, slot: int) -> None:
         self._pos[slot] = -1
-        del self._slot_seq[slot]
+        seq = self._slot_seq.pop(slot)
         if self.paged:
             # scrub the freed pages' validity planes before they return
             # to the free list (pool invariant: free pages carry pos=-1)
@@ -309,6 +389,7 @@ class ServeEngine:
                 paged_scrub_jit, self.cfg, self.cache_mgr.cache, ids,
                 name=SCRUB_EVENT, command_type=SCRUB_EVENT)
             self.cache_mgr.update(cache)
+            self._link(seq, self.q_admit)
         self.scheduler.release(slot)
 
     def _fail(self, seq: Sequence, err: ReproError) -> None:
@@ -326,7 +407,9 @@ class ServeEngine:
         seq.status = Status.FAILED
         seq.error = err
         seq.finished_at = self.tick
-        self.stats["failures"] += 1
+        self.metrics.inc("failures")
+        if self.trace is not None:
+            self.trace.fail(seq.rid, self.tick, detail=err_string(err.code))
 
     def _reap(self) -> List[Sequence]:
         """Deadline/cancellation sweep, run at the top of every tick:
@@ -361,7 +444,17 @@ class ServeEngine:
         slot's decode inputs."""
         seq.status = Status.ACTIVE
         seq.admitted_at = self.tick
+        seq.last_emit_tick = self.tick
         self._slot_seq[slot] = seq
+        if self.tracing:
+            # TTFT: token 0 falls out of the prefill logits, so first
+            # token time == queue wait + (zero-tick) admission
+            wait = self.tick - seq.submitted_at
+            self.metrics.observe("queue_wait_ticks", wait)
+            self.metrics.observe("ttft_ticks", wait)
+        if self.trace is not None:
+            self.trace.transition(seq.rid, SpanKind.DECODE, self.tick,
+                                  token_index=0)
         if seq.emit(first_tok):
             self._retire(seq)
         else:
@@ -374,6 +467,8 @@ class ServeEngine:
         tokens = seq.request.prompt
         reg = self._registry
         L = seq.prompt_len
+        if self.trace is not None:
+            self.trace.transition(seq.rid, SpanKind.PREFILL, self.tick)
         if shared_toks:
             # prefix sharing: gather the resident shared span back into
             # prefill layout and prefill only the unshared tail — both
@@ -384,8 +479,8 @@ class ServeEngine:
             # partial prefill compile once per bucket pair, not once per
             # (prefix, tail) length pair.
             seq.shared_tokens = shared_toks
-            self.stats["prefix_hits"] += 1
-            self.stats["shared_tokens"] += shared_toks
+            self.metrics.inc("prefix_hits")
+            self.metrics.inc("shared_tokens", shared_toks)
             m = shared_toks // self.page_size
             m_b = reg.page_bucket(m)
             pad_ids = {}
@@ -396,6 +491,7 @@ class ServeEngine:
             prefix = self.q_admit.enqueue(
                 paged_gather_jit, self.cfg, self.cache_mgr.cache, pad_ids,
                 name=PREFIX_GATHER_EVENT, command_type=PREFIX_GATHER_EVENT)
+            self._link(seq, self.q_admit)
             prefix_pad = m_b * self.page_size
             tail_len = reg.len_bucket(L - shared_toks)
             tail = np.zeros((1, tail_len), np.int32)
@@ -405,6 +501,7 @@ class ServeEngine:
                 jnp.asarray(tail), prefix, jnp.int32(shared_toks),
                 jnp.int32(L),
                 name=PREFILL_EVENT, command_type=PREFILL_EVENT)
+            self._link(seq, self.q_admit)
             ring_len = prefix_pad + tail_len
         else:
             ring_len = reg.len_bucket(L)
@@ -415,7 +512,8 @@ class ServeEngine:
                 reg.prefill(ring_len), self.params, jnp.asarray(prompt),
                 jnp.int32(L),
                 name=PREFILL_EVENT, command_type=PREFILL_EVENT)
-        self.stats["prefill_tokens"] += seq.prompt_len - shared_toks
+            self._link(seq, self.q_admit)
+        self.metrics.inc("prefill_tokens", seq.prompt_len - shared_toks)
         # relayout and slot packing are enqueued as *pure* jitted fns
         # whose outputs are the events' outputs — finish() fences
         # them and the spans track the copies, not host dispatch
@@ -424,6 +522,7 @@ class ServeEngine:
             blocks = self.q_admit.enqueue(
                 align, cache, jnp.int32(L), jnp.int32(shared_toks),
                 name=ALIGN_EVENT, command_type=ALIGN_EVENT)
+            self._link(seq, self.q_admit)
             ids = self.cache_mgr.table_ids(slot)
             if shared_toks:
                 # donation skips the shared span: its blocks sink into
@@ -436,19 +535,25 @@ class ServeEngine:
                 paged_insert_jit, self.cfg, self.cache_mgr.cache, blocks,
                 ids, jnp.int32(slot),
                 name=PAGE_INSERT_EVENT, command_type=PAGE_INSERT_EVENT)
+            self._link(seq, self.q_admit)
         else:
             cache = self.q_admit.enqueue(
                 align, cache, jnp.int32(L), jnp.int32(0),
                 name=ALIGN_EVENT, command_type=ALIGN_EVENT)
+            self._link(seq, self.q_admit)
             packed = self.q_admit.enqueue(
                 insert_jit, self.cache_mgr.cache, cache, jnp.int32(slot),
                 name=INSERT_EVENT, command_type=INSERT_EVENT)
+            self._link(seq, self.q_admit)
         self.cache_mgr.update(packed)
         if self.paged:
             # publish this prompt's full-page blocks for later arrivals
             # (host-side; the content lands via Admit-lane ordering)
             self.cache_mgr.register_prefix(slot, tokens)
-        self.stats["prefills"] += 1
+        self.metrics.inc("prefills")
+        if self.trace is not None:
+            # any bucket that compiled during this admission served it
+            self.trace.link(seq.rid, *self._drain_compiles())
         seq.pos = seq.prompt_len
         # first output token comes from the prefill logits
         lg = np.asarray(logits[:, -1])
@@ -463,16 +568,24 @@ class ServeEngine:
         """Resume a preempted sequence: scatter its swapped page blocks
         into freshly bound pages and restore its decode inputs verbatim
         (bit-identical to never having been preempted)."""
+        if self.trace is not None:
+            self.trace.transition(seq.rid, SpanKind.SWAP, self.tick)
         packed = self.q_admit.enqueue(
             paged_insert_jit, self.cfg, self.cache_mgr.cache, seq.swap,
             self.cache_mgr.table_ids(slot), jnp.int32(slot),
             name=SWAP_IN_EVENT, command_type=SWAP_IN_EVENT)
+        self._link(seq, self.q_admit)
         self.cache_mgr.update(packed)
         seq.swap = None
-        self.stats["swap_ins"] += 1
+        self.metrics.inc("swap_ins")
         seq.status = Status.ACTIVE
         seq.admitted_at = self.tick
         self._slot_seq[slot] = seq
+        if self.trace is not None:
+            # resume the interrupted token's service interval: same
+            # token_index as the span the preemption cut short
+            self.trace.transition(seq.rid, SpanKind.DECODE, self.tick,
+                                  token_index=len(seq.out_tokens) - 1)
         self._tokens[slot, 0] = seq.next_tok
         self._pos[slot] = seq.pos
 
@@ -559,17 +672,23 @@ class ServeEngine:
                 "the arena cannot hold one budget-length request")
         victim = max(cands, key=lambda s: (s.request.arrival, s.rid))
         slot = victim.slot
+        if self.trace is not None:
+            # transition first so the swap-out + scrub events land on
+            # the PREEMPTED span, not the interrupted DECODE span
+            self.trace.transition(victim.rid, SpanKind.PREEMPTED,
+                                  self.tick)
         victim.swap = self.q_admit.enqueue(
             paged_extract_jit, self.cfg, self.cache_mgr.cache,
             self.cache_mgr.table_ids(slot), jnp.int32(slot),
             name=SWAP_OUT_EVENT, command_type=SWAP_OUT_EVENT)
+        self._link(victim, self.q_admit)
         victim.next_tok = int(self._tokens[slot, 0])
         victim.status = Status.PREEMPTED
         victim.preemptions += 1
         victim.slot = -1
         self._release_slot(slot)
         self.scheduler.requeue_front(victim)
-        self.stats["preemptions"] += 1
+        self.metrics.inc("preemptions")
         return victim
 
     def _provision(self) -> List[Sequence]:
@@ -589,16 +708,26 @@ class ServeEngine:
         serving."""
         failed: List[Sequence] = []
         batch = CowBatch(self.cache_mgr.widths)
+        contrib: List = []      # (seq, n_copies) charged this batch
 
         def flush() -> None:
             pending = batch.drain()
             if pending is None:
+                contrib.clear()
                 return
             src, dst = pending
             cache = self.q_decode.enqueue(
                 paged_copy_jit, self.cfg, self.cache_mgr.cache,
                 src, dst, name=COW_EVENT, command_type=COW_EVENT)
             self.cache_mgr.update(cache)
+            if self.trace is not None:
+                ev = self.q_decode.last_event()
+                for s, n in contrib:
+                    self.trace.mark(
+                        s.rid, SpanKind.COW, self.tick,
+                        detail=f"{n} pages",
+                        events=(ev,) if ev is not None else ())
+            contrib.clear()
 
         for slot in sorted(self._slot_seq):
             while slot in self._slot_seq:
@@ -625,7 +754,10 @@ class ServeEngine:
                     # dropped a refcount to 1, obviating a copy)
                     self._preempt_one()
                     continue
-                self.stats["cow_copies"] += batch.add(plan)
+                n_cow = batch.add(plan)
+                self.metrics.inc("cow_copies", n_cow)
+                if n_cow and self.trace is not None:
+                    contrib.append((self._slot_seq[slot], n_cow))
                 break
         flush()
         return failed
@@ -658,7 +790,7 @@ class ServeEngine:
                 jnp.asarray(rows),
                 name=DECODE_EVENT, command_type=DECODE_EVENT)
             self.cache_mgr.update(cache)
-            self.stats["decode_steps"] += 1
+            self.metrics.inc("decode_steps")
             packed_lg = np.asarray(logits[:, 0])          # (W, V)
             # expand to slot-indexed logits so sampling, fault injection
             # and the quarantine stay on logical slots
@@ -672,8 +804,16 @@ class ServeEngine:
                 jnp.asarray(self._tokens), jnp.asarray(self._pos),
                 name=DECODE_EVENT, command_type=DECODE_EVENT)
             self.cache_mgr.update(cache)
-            self.stats["decode_steps"] += 1
+            self.metrics.inc("decode_steps")
             lg = np.asarray(logits[:, 0])                 # (n_slots, V)
+        decode_ev = None
+        if self.trace is not None:
+            decode_ev = self.q_decode.last_event()
+            compiles = self._drain_compiles()
+            if compiles:
+                # a decode-width compile this tick served every packed slot
+                for slot in active:
+                    self.trace.link(self._slot_seq[slot].rid, *compiles)
         if self._plan is not None:
             lg = self._plan.corrupt_logits(lg, self.tick)
         if self.guards:
@@ -695,8 +835,20 @@ class ServeEngine:
             seq = self._slot_seq[slot]
             tok = int(nxt[slot])
             seq.pos += 1
-            self.stats["decoded_tokens"] += 1
-            if seq.emit(tok):
+            self.metrics.inc("decoded_tokens")
+            if self.tracing:
+                self.metrics.observe("tbt_ticks",
+                                     self.tick - seq.last_emit_tick)
+            seq.last_emit_tick = self.tick
+            if decode_ev is not None:
+                # link before the transition: the kernel served the span
+                # that was open while this token was in flight
+                self.trace.link(seq.rid, decode_ev)
+            done = seq.emit(tok)
+            if self.trace is not None:
+                self.trace.transition(seq.rid, SpanKind.DECODE, self.tick,
+                                      token_index=len(seq.out_tokens) - 1)
+            if done:
                 self._retire(seq)
                 finished.append(seq)
             else:
@@ -714,6 +866,13 @@ class ServeEngine:
         finished = self._reap() if self.guards else []
         finished += [s for s in self._admit() if s.status.terminal]
         finished += self._decode_tick()
+        if self.tracing:
+            self.metrics.set_gauge("active_slots", len(self._slot_seq))
+            self.metrics.set_gauge("queue_depth", self.scheduler.n_waiting)
+            if self.paged:
+                self.metrics.set_gauge(
+                    "pool_pages_held",
+                    sum(self.cache_mgr.pages_held().values()))
         self.tick += 1
         return finished
 

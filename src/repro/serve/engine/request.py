@@ -106,6 +106,8 @@ class Sequence:
     submitted_at: int = -1            # tick stamps for latency accounting
     admitted_at: int = -1             # and deadline enforcement
     finished_at: int = -1
+    last_emit_tick: int = -1          # tick of the latest emitted token
+                                      # (inter-token latency metric)
     # terminal failure report (status FAILED): the structured error that
     # killed the sequence — Code.CANCELLED / DEADLINE_EXCEEDED /
     # NUMERIC_FAULT / OUT_OF_RESOURCES / SUBMISSION_FAILURE

@@ -465,6 +465,9 @@ class BucketRegistry:
             if self.len_bucketing else ()
         self.compiles: Dict[str, int] = {}
         self.events: list = []
+        # observer called as on_compile(kind) whenever a bucket shape
+        # actually compiles (the engine feeds its compile counter)
+        self.on_compile: Optional[Any] = None
         self._wrapped: Dict[tuple, Any] = {}
 
     # -- ladder lookups --------------------------------------------------
@@ -513,6 +516,8 @@ class BucketRegistry:
                 ev.mark_end()
                 self.compiles[kind] = self.compiles.get(kind, 0) + 1
                 self.events.append(ev)
+                if self.on_compile is not None:
+                    self.on_compile(kind)
             return out
 
         return call

@@ -71,6 +71,21 @@ class TestUnit:
         chart = render_queue_chart(rows, width=40)
         assert "Main" in chart and "Comms" in chart
 
+    def test_roundtrip_name_containing_separator(self):
+        """The name column is rightmost and may contain the separator
+        itself (e.g. compile markers like ``TRACE_COMPILE:prefill[16]``
+        exported with ``sep=\":\"``) — parse must split on exactly the
+        first three separators, not all of them."""
+        from repro.prof.export import export_table
+        infos = [ProfInfo("TRACE_COMPILE:prefill[16]", "MARK", "Compile",
+                          0, 5, 5),
+                 ProfInfo("DECODE_KERNEL", "NDRANGE", "Decode", 6, 7, 9)]
+        p = make_prof(infos)
+        for sep in (":", "\t", ","):
+            rows = parse_table(export_table(p, sep=sep), sep=sep)
+            assert rows == [("Compile", 5, 5, "TRACE_COMPILE:prefill[16]"),
+                            ("Decode", 7, 9, "DECODE_KERNEL")]
+
 
 @st.composite
 def info_lists(draw):
