@@ -76,6 +76,13 @@ def main() -> int:
                     help="eagerly compile the bucket ladders before "
                          "serving (compile hits land up front, not on "
                          "first use)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="after the normal run, serve the same requests "
+                         "again through an autotuned engine (attn_impl="
+                         "'auto': per-shape kernel configs resolved from "
+                         "the measured cache or the cost model at "
+                         "warmup) and assert the streams are "
+                         "byte-identical to the untuned run")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write the merged device+request timeline as "
                          "Chrome/Perfetto trace_event JSON")
@@ -162,6 +169,25 @@ def main() -> int:
     if args.trace:
         export_perfetto(args.trace, prof=prof, trace=eng.trace)
         print(f"perfetto trace written to {args.trace}")
+
+    if args.autotune:
+        # one numeric path: the autotuned engine resolves every shape to
+        # a concrete kernel config at warmup, then must reproduce the
+        # untuned run's streams byte-for-byte
+        eng2 = ServeEngine(cfg, params, n_slots=args.slots,
+                           budget=args.budget, prefill_impl="xla",
+                           paged=args.paged, page_size=args.page_size,
+                           pool_pages=args.pool_pages,
+                           buckets=args.buckets, autotune=True)
+        eng2.warmup()
+        print(f"\nautotune: {len(eng2.autotune_events)} shape keys "
+              f"resolved at warmup")
+        for ev in eng2.autotune_events:
+            print(f"  {ev.name.split(':', 1)[1]}")
+        streams2 = eng2.run(reqs)
+        assert streams2 == streams, \
+            "autotuned engine streams diverge from untuned run"
+        print("autotuned streams byte-identical to untuned run ✓")
     return 0
 
 

@@ -1,0 +1,277 @@
+"""Kernel autotuner: per-shape grid selection with a persistent cache.
+
+The cf4ocl thesis is that the dispatch layer, not the kernel author,
+should own configuration: profile the candidates, pick the winner, and
+make that choice invisible to callers.  This module is that layer for
+the attention kernels.  ``impl="auto"`` on ``decode_attention`` /
+``flash_attention`` resolves — at trace time, from static shapes — to a
+concrete ``(impl, block)`` configuration via a three-tier policy:
+
+1. **Measured cache.**  A prior sweep (the E7 bench, or a warmed-up
+   engine on real hardware) recorded the fastest candidate for this
+   shape key in a JSON cache file.  Use it.
+2. **Cost model.**  No measurement for this key: a deterministic,
+   measurement-free heuristic picks the config.  On an interpret-mode
+   host (``backend == "cpu"``) the emulated Pallas kernel can never win
+   wall-clock, so the model picks the XLA reference — which is itself a
+   first-class candidate, EngineCL-style: the framework selects the
+   winning *device path* per shape, it does not hard-code one.
+3. Never measure implicitly: ``choose()`` is called during tracing and
+   must be pure host-side lookup.  Measured sweeps run explicitly via
+   ``tune()`` (benches, warmup lanes).
+
+Shape keys cover everything that changes the optimal grid:
+``(op, cache_len, q_len, q_heads, kv_heads, head_dim, page_size,
+dtype, backend)``.  The cache file lives at ``$REPRO_AUTOTUNE_CACHE``
+(default ``~/.cache/repro/autotune.json``) and stores, per key, the
+chosen config, its provenance (``measured`` | ``model``) and the full
+sweep that produced it — see DESIGN.md "Kernel autotuning & shape keys".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeKey:
+    """Everything that changes which kernel grid wins for one attention
+    call.  ``page_size == 0`` means the dense (non-paged) layout."""
+    op: str              # "decode" | "decode_paged" | "flash"
+    cache_len: int       # S — kv span the kernel reduces over
+    q_len: int           # 1 for decode; T for prefill flash
+    q_heads: int
+    kv_heads: int
+    head_dim: int
+    page_size: int = 0
+    dtype: str = "float32"
+    backend: str = "cpu"
+
+    def encode(self) -> str:
+        return "|".join([
+            self.op, f"S{self.cache_len}", f"T{self.q_len}",
+            f"Hq{self.q_heads}", f"Hkv{self.kv_heads}",
+            f"D{self.head_dim}", f"ps{self.page_size}",
+            self.dtype, self.backend])
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One point in the candidate space.  The XLA reference is a
+    candidate like any grid (``impl="xla"``, blocks 0)."""
+    impl: str            # "pallas" | "xla"
+    block_q: int = 0     # 0 = n/a (decode) or kernel default
+    block_kv: int = 0    # 0 = n/a (xla) or kernel default
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict) -> "KernelConfig":
+        return KernelConfig(impl=d["impl"], block_q=int(d.get("block_q", 0)),
+                            block_kv=int(d.get("block_kv", 0)))
+
+
+def _default_cache_path() -> str:
+    return os.environ.get(
+        _CACHE_ENV,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+_BLOCK_LADDER = (32, 64, 128, 256, 512)
+
+
+class Autotuner:
+    """Shape-keyed kernel-config store: measured sweeps persist to disk,
+    unmeasured keys fall back to the deterministic cost model."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = str(path) if path is not None else _default_cache_path()
+        self._lock = threading.Lock()
+        # key string -> {"config": {...}, "source": str, "sweep": [...]}
+        self._entries: Dict[str, Dict] = {}
+        self._load()
+
+    # ------------------------------------------------------------ persistence
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if isinstance(data, dict) and data.get("version") == _CACHE_VERSION:
+                entries = data.get("entries", {})
+                if isinstance(entries, dict):
+                    self._entries = entries
+        except (OSError, ValueError):
+            # missing or corrupt cache: start empty — the cost model
+            # covers every key, so this is never fatal
+            self._entries = {}
+
+    def save(self) -> None:
+        payload = {"version": _CACHE_VERSION, "entries": self._entries}
+        tmp = self.path + ".tmp"
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    # ------------------------------------------------------------- candidates
+    def candidates(self, key: ShapeKey) -> List[KernelConfig]:
+        """Candidate space for one shape key, XLA reference first.
+
+        Decode: split-S grids — every ladder block that divides S
+        (``nsplit = S // block_kv``), plus S itself (one split).
+        Paged decode: the page size fixes the block, so the only grid
+        question is kernel-vs-reference.  Flash: (block_q, block_kv)
+        tile pairs from the ladder's upper rungs.
+        """
+        cands = [KernelConfig(impl="xla")]
+        if key.op == "decode":
+            S = key.cache_len
+            blocks = sorted({b for b in _BLOCK_LADDER
+                             if b <= S and S % b == 0} | {S})
+            cands += [KernelConfig("pallas", block_kv=b) for b in blocks]
+        elif key.op == "decode_paged":
+            cands.append(KernelConfig("pallas", block_kv=key.page_size))
+        else:  # flash
+            seen = set()
+            for bq in (512, 256):
+                for bkv in (512, 256):
+                    pair = (min(bq, key.q_len), min(bkv, key.cache_len))
+                    if pair not in seen:
+                        seen.add(pair)
+                        cands.append(KernelConfig("pallas", block_q=pair[0],
+                                                  block_kv=pair[1]))
+        return cands
+
+    # -------------------------------------------------------------- selection
+    def cost_model(self, key: ShapeKey) -> KernelConfig:
+        """Deterministic, measurement-free pick (same key → same config,
+        across processes).  See the module docstring for the rationale
+        of the interpret-mode branch."""
+        if key.backend == "cpu":
+            # interpret-mode Pallas is an emulator: the reference path
+            # is the winning configuration on this backend, always
+            return KernelConfig(impl="xla")
+        if key.op == "decode":
+            # largest ladder block that divides S with a bounded split
+            # count: enough split-S parallelism to spread S over cores
+            # without starving each cell of arithmetic intensity
+            S = key.cache_len
+            for b in reversed(_BLOCK_LADDER):
+                if b <= S and S % b == 0 and S // b <= 16:
+                    return KernelConfig("pallas", block_kv=b)
+            return KernelConfig("pallas", block_kv=S)
+        if key.op == "decode_paged":
+            return KernelConfig("pallas", block_kv=key.page_size)
+        return KernelConfig("pallas", block_q=512, block_kv=512)
+
+    def choose(self, key: ShapeKey) -> KernelConfig:
+        """Resolve a key to a config: measured cache, else cost model.
+        Pure host-side lookup — safe to call at trace time.  Cost-model
+        picks are memoized in-process but never persisted, so a later
+        measured sweep cleanly takes precedence on disk."""
+        ks = key.encode()
+        with self._lock:
+            ent = self._entries.get(ks)
+            if ent is None:
+                cfg = self.cost_model(key)
+                ent = {"config": cfg.to_json(), "source": "model",
+                       "sweep": []}
+                self._entries[ks] = ent
+            return KernelConfig.from_json(ent["config"])
+
+    def record(self, key: ShapeKey, config: KernelConfig,
+               sweep: Optional[List[Dict]] = None,
+               source: str = "measured") -> None:
+        """Store a (normally measured) winner for ``key`` and persist."""
+        with self._lock:
+            self._entries[key.encode()] = {
+                "config": config.to_json(), "source": source,
+                "sweep": list(sweep or [])}
+        if source == "measured":
+            self.save()
+
+    def tune(self, key: ShapeKey,
+             runner: Callable[[KernelConfig], float],
+             ) -> Tuple[KernelConfig, List[Dict]]:
+        """Measured sweep: time every candidate with ``runner`` (returns
+        seconds per rep; lower is better), record and persist the winner.
+        Explicit-only — never called from ``choose()``."""
+        sweep: List[Dict] = []
+        best: Optional[Tuple[float, KernelConfig]] = None
+        for cand in self.candidates(key):
+            secs = float(runner(cand))
+            sweep.append({**cand.to_json(), "seconds": secs})
+            if best is None or secs < best[0]:
+                best = (secs, cand)
+        assert best is not None
+        self.record(key, best[1], sweep=sweep, source="measured")
+        return best[1], sweep
+
+    def entry(self, key: ShapeKey) -> Optional[Dict]:
+        with self._lock:
+            return self._entries.get(key.encode())
+
+
+# ------------------------------------------------------------------ singleton
+
+_GLOBAL: Optional[Autotuner] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def get_autotuner() -> Autotuner:
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        if _GLOBAL is None:
+            _GLOBAL = Autotuner()
+        return _GLOBAL
+
+
+def set_autotuner(tuner: Optional[Autotuner]) -> None:
+    """Swap the process-global tuner (tests, benches)."""
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        _GLOBAL = tuner
+
+
+# ---------------------------------------------------------------- key helpers
+
+def decode_shape_key(q, k_cache, page_table=None) -> ShapeKey:
+    """Shape key for one ``decode_attention`` call (works on tracers —
+    only static shape/dtype attributes are read)."""
+    B, Hq, _, D = q.shape
+    if page_table is not None:
+        _, Hkv, ps, _ = k_cache.shape
+        return ShapeKey("decode_paged",
+                        cache_len=int(page_table.shape[-1]) * int(ps),
+                        q_len=1, q_heads=int(Hq), kv_heads=int(Hkv),
+                        head_dim=int(D), page_size=int(ps),
+                        dtype=str(k_cache.dtype),
+                        backend=jax.default_backend())
+    _, Hkv, S, _ = k_cache.shape
+    return ShapeKey("decode", cache_len=int(S), q_len=1, q_heads=int(Hq),
+                    kv_heads=int(Hkv), head_dim=int(D), page_size=0,
+                    dtype=str(k_cache.dtype), backend=jax.default_backend())
+
+
+def flash_shape_key(q, k) -> ShapeKey:
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    return ShapeKey("flash", cache_len=int(S), q_len=int(T),
+                    q_heads=int(Hq), kv_heads=int(Hkv), head_dim=int(D),
+                    page_size=0, dtype=str(k.dtype),
+                    backend=jax.default_backend())
+
+
+__all__ = ["ShapeKey", "KernelConfig", "Autotuner", "get_autotuner",
+           "set_autotuner", "decode_shape_key", "flash_shape_key"]

@@ -2,7 +2,11 @@
 
 ``impl="pallas"`` runs the flash-decode split-S kernel (interpret-mode on
 CPU); ``impl="xla"`` runs the jnp reference — identical semantics, used by
-dry-runs and as the correctness oracle.  Both return the updated cache
+dry-runs and as the correctness oracle; ``impl="auto"`` resolves the call's
+shape key through the autotuner (kernels/autotune.py): a measured winner
+from the on-disk cache if one exists, the deterministic cost model
+otherwise.  Resolution reads only static shapes, so it runs at trace time
+under an enclosing jit.  Both kernel paths return the updated cache
 tensors so the caller's KVCache pytree is rebuilt functionally; under jit
 on TPU the pallas path updates the cache in place (input/output aliasing).
 
@@ -22,6 +26,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..autotune import decode_shape_key, get_autotuner
 from .decode_attention import (decode_attention_paged_pallas,
                                decode_attention_pallas)
 from .ref import decode_attention_paged_ref, decode_attention_ref
@@ -31,6 +36,36 @@ _INTERPRET = jax.default_backend() == "cpu"
 
 @functools.partial(jax.jit, static_argnames=(
     "window", "scale", "impl", "block_kv"))
+def _decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
+                      window: Optional[int] = None,
+                      scale: Optional[float] = None,
+                      impl: str = "pallas",
+                      block_kv: int = 256,
+                      page_table=None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    if page_table is not None:
+        return _decode_attention_paged(q, k_cache, v_cache, pos_cache,
+                                       k_new, v_new, pos, page_table,
+                                       window, scale, impl)
+    if impl == "xla":
+        return decode_attention_ref(q, k_cache, v_cache, pos_cache,
+                                    k_new, v_new, pos, window=window,
+                                    scale=scale)
+    S = k_cache.shape[2]
+    B = pos_cache.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    # scalar pos = lockstep batch; (B,) pos = per-sequence decode depths
+    pos = jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (B,))
+    widx = jnp.mod(pos, S)
+    new_pos = pos_cache.at[jnp.arange(B), widx].set(
+        pos.astype(pos_cache.dtype))
+    out, ok, ov = decode_attention_pallas(
+        q, k_cache, v_cache, new_pos, k_new, v_new, widx, pos,
+        window=window, scale=scale, block_kv=block_kv,
+        interpret=_INTERPRET)
+    return out, ok, ov, new_pos
+
+
 def decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
                      window: Optional[int] = None,
                      scale: Optional[float] = None,
@@ -53,27 +88,15 @@ def decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new, pos,
     copy-on-write invariant: a page is writable iff its refcount is 1).
     Returns ``(out, new_k_cache, new_v_cache, new_pos_cache)``.
     """
-    if page_table is not None:
-        return _decode_attention_paged(q, k_cache, v_cache, pos_cache,
-                                       k_new, v_new, pos, page_table,
-                                       window, scale, impl)
-    if impl == "xla":
-        return decode_attention_ref(q, k_cache, v_cache, pos_cache,
-                                    k_new, v_new, pos, window=window,
-                                    scale=scale)
-    S = k_cache.shape[2]
-    B = pos_cache.shape[0]
-    pos = jnp.asarray(pos, jnp.int32)
-    # scalar pos = lockstep batch; (B,) pos = per-sequence decode depths
-    pos = jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (B,))
-    widx = jnp.mod(pos, S)
-    new_pos = pos_cache.at[jnp.arange(B), widx].set(
-        pos.astype(pos_cache.dtype))
-    out, ok, ov = decode_attention_pallas(
-        q, k_cache, v_cache, new_pos, k_new, v_new, widx, pos,
-        window=window, scale=scale, block_kv=block_kv,
-        interpret=_INTERPRET)
-    return out, ok, ov, new_pos
+    if impl == "auto":
+        cfg = get_autotuner().choose(
+            decode_shape_key(q, k_cache, page_table))
+        impl = cfg.impl
+        if cfg.block_kv:
+            block_kv = cfg.block_kv
+    return _decode_attention(q, k_cache, v_cache, pos_cache, k_new, v_new,
+                             pos, window=window, scale=scale, impl=impl,
+                             block_kv=block_kv, page_table=page_table)
 
 
 def _decode_attention_paged(q, k_arena, v_arena, pos_arena, k_new, v_new,

@@ -43,4 +43,40 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(q.dtype)
 
 
-__all__ = ["attention_ref"]
+def attention_pos_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                      causal: bool = True, window: Optional[int] = None,
+                      scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention with explicit position planes.
+
+    q_pos: (B, T); k_pos: (B, S) int32 — ``-1`` marks padded rows/keys
+    (always masked; fully-masked query rows emit zeros).  This is the
+    oracle for the kernel's position-plane mode (bucketed serve layouts,
+    partial prefill with prefix padding).
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    qp = q_pos[:, :, None]                     # (B, T, 1)
+    kp = k_pos[:, None, :]                     # (B, 1, S)
+    mask = kp >= 0
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
+    probs = jnp.nan_to_num(jnp.exp(
+        logits - logits.max(-1, keepdims=True)))
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+__all__ = ["attention_ref", "attention_pos_ref"]

@@ -2,11 +2,14 @@
 and cross-attention; ring-buffer KV-cache for decode.
 
 Training/prefill attention can run through the Pallas flash kernel
-(cfg.attn_impl="pallas") or the jnp path ("xla", default for dry-runs).
-Decode runs through the fused Pallas decode kernel (cache write + split-S
-single-query attention in one ``pallas_call``) when
-``cfg.attn_impl="pallas"``, with ``_xla_attention`` as the reference
-fallback.
+(cfg.attn_impl="pallas"), the jnp path ("xla", default for dry-runs), or
+the autotuned router ("auto": the kernel ops resolve each shape key to
+its winning config — see kernels/autotune.py).  Decode runs through the
+fused Pallas decode kernel (cache write + split-S single-query attention
+in one ``pallas_call``) when ``cfg.attn_impl`` is "pallas"/"auto", with
+``_xla_attention`` as the reference fallback.  Partial (prefix-shared)
+prefill runs the flash kernel too, via explicit position planes — no
+XLA-only fallback remains on the serving path.
 
 Ring-buffer cache (DESIGN.md "Serving path"): ``KVCache`` carries the
 absolute position of every slot alongside k/v.  Slot ``j`` of a cache of
@@ -120,8 +123,14 @@ def self_attention(p, x, cfg, kind: str, positions,
 
     if cache is None:
         # training/prefill: self-contained sequence
-        if cfg.attn_impl == "pallas":
-            out = flash_attention(q, k, v, causal=True, window=window)
+        if cfg.attn_impl in ("pallas", "auto"):
+            # explicit position planes: bucketed prefill pads rows with
+            # pos = -1, which must mask (identical reductions to the
+            # index-arithmetic mode on un-padded layouts)
+            out = flash_attention(q, k, v, causal=True, window=window,
+                                  impl=cfg.attn_impl,
+                                  q_pos=positions.astype(jnp.int32),
+                                  k_pos=positions.astype(jnp.int32))
         elif T > 1024:
             # chunked online-softmax (flash semantics in pure XLA) — never
             # materializes the (T, S) score matrix; required for the 32k
@@ -162,7 +171,17 @@ def self_attention(p, x, cfg, kind: str, positions,
             [cache.pos.astype(jnp.int32),
              jnp.broadcast_to(positions.astype(jnp.int32)[None, :],
                               (B, T))], axis=1)
-        if kf.shape[2] > 1024:
+        if cfg.attn_impl in ("pallas", "auto"):
+            # flash kernel with explicit position planes: the tail's T
+            # queries reduce over the same s+T keys, in the same
+            # block_kv partition, as the one-shot prefill — so partial
+            # prefill is row-for-row bit-exact against it (tested) and
+            # prefix sharing stays enabled under Pallas prefill
+            out = flash_attention(q, kf, vf, causal=True, window=window,
+                                  impl=cfg.attn_impl,
+                                  q_pos=positions.astype(jnp.int32),
+                                  k_pos=kp)
+        elif kf.shape[2] > 1024:
             # mirror the one-shot prefill's flash threshold so a long
             # shared prefill and its unshared twin take the same
             # numerical path
@@ -201,11 +220,13 @@ def self_attention(p, x, cfg, kind: str, positions,
             "paged caches decode through the per-sequence (B, T) path"
         S = cache.k.shape[2]
         pos = positions if positions.ndim == 0 else positions.reshape(-1)[0]
-        if cache.pos is not None and cfg.attn_impl == "pallas" and T == 1:
+        if cache.pos is not None and T == 1 and \
+                cfg.attn_impl in ("pallas", "auto"):
             # fused path: cache write + split-S attention in one kernel
             out, ck, cv, cpos = decode_attention(
                 q, cache.k, cache.v, cache.pos, k.astype(cache.k.dtype),
-                v.astype(cache.v.dtype), pos, window=window)
+                v.astype(cache.v.dtype), pos, window=window,
+                impl=cfg.attn_impl)
             new_cache = KVCache(ck, cv, cpos)
         else:
             widx = jnp.mod(pos, S) if (rolling or cache.pos is not None) \
@@ -480,8 +501,8 @@ def bidir_attention(p, x, cfg) -> jax.Array:
     q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
     k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
     v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
-    if cfg.attn_impl == "pallas":
-        out = flash_attention(q, k, v, causal=False)
+    if cfg.attn_impl in ("pallas", "auto"):
+        out = flash_attention(q, k, v, causal=False, impl=cfg.attn_impl)
     else:
         pos = jnp.arange(T)
         out = _xla_attention(q, k, v, causal=False, window=None,

@@ -84,7 +84,7 @@ class ModelConfig:
     vis_tokens: int = 0
     # numerics / impl
     dtype: str = "bfloat16"
-    attn_impl: str = "xla"          # xla | pallas
+    attn_impl: str = "xla"          # xla | pallas | auto (autotuned)
     attn_chunk: int = 256           # KV-chunk of the streaming softmax
     attn_qblocks: int = 1           # >1: static causal chunk skipping
     norm_impl: str = "xla"

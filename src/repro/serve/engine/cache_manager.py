@@ -194,7 +194,8 @@ class PagedCacheManager:
             return self.n_ptes[kind]
         return math.ceil(max(n_positions, 0) / self.page_size)
 
-    def match_prefix(self, prompt) -> Tuple[int, Dict[str, List[int]]]:
+    def match_prefix(self, prompt, chain=None
+                     ) -> Tuple[int, Dict[str, List[int]]]:
         """Longest resident shared prefix of ``prompt`` (full pages
         only, uniform across kinds).  Returns
         ``(shared_tokens, {kind: page-id run})`` — ``(0, {})`` when
@@ -204,7 +205,10 @@ class PagedCacheManager:
         so admission always prefills at least the final token (the
         first output token falls out of the prefill logits).  Pure —
         admission re-matches per candidate, so pages registered by an
-        earlier admission in the same tick are already visible."""
+        earlier admission in the same tick are already visible.
+        ``chain``: the sequence's :class:`paging.PrefixChain` — carries
+        the running hash across ticks so re-matching a queued prompt
+        costs zero hashes instead of re-walking the chain."""
         L = len(prompt)
         if not self.sharing or any(L > W for W in self.widths.values()):
             return 0, {}
@@ -213,7 +217,10 @@ class PagedCacheManager:
             return 0, {}
         # the chain keys depend only on tokens and page size (uniform
         # across kinds): hash once, bounded by cap, probe every index
-        keys = list(next(iter(self.prefix.values())).keys(prompt, cap))
+        if chain is not None:
+            keys = chain.keys(prompt, cap)
+        else:
+            keys = list(next(iter(self.prefix.values())).keys(prompt, cap))
         runs = {kind: idx.match_keys(keys)
                 for kind, idx in self.prefix.items()}
         m = min(len(r) for r in runs.values())
@@ -275,13 +282,14 @@ class PagedCacheManager:
         self._dirty = True
         return True
 
-    def register_prefix(self, slot: int, prompt) -> None:
+    def register_prefix(self, slot: int, prompt, chain=None) -> None:
         """Publish the slot's full-page prompt blocks in the prefix
         index so later admissions with the same prefix map them by
         reference.  Skips kinds whose ring wrapped during prefill
         (``L > W``: the logical front no longer holds the prefix);
         idempotent for pages that were themselves mapped from the
-        index."""
+        index.  ``chain``: precomputed :class:`paging.PrefixChain` —
+        registration reuses the admission-time keys (O(new pages))."""
         if not self.sharing:
             return
         L = len(prompt)
@@ -289,7 +297,9 @@ class PagedCacheManager:
             if L > self.widths[kind]:
                 continue
             n_full = L // self.page_size
-            idx.register(prompt, self.tables[kind][slot][:n_full])
+            keys = chain.keys(prompt, n_full) if chain is not None else None
+            idx.register(prompt, self.tables[kind][slot][:n_full],
+                         keys=keys)
 
     def prepare_write(self, slot: int, pos: int
                       ) -> Optional[Dict[str, Tuple[List[int], List[int]]]]:

@@ -146,7 +146,10 @@ from ...prof.metrics import MetricsRegistry, StatsView
 from ...prof.trace import SpanKind, TraceCollector
 from .. import paging as P
 from ..step import (ALIGN_EVENT, DECODE_EVENT, PREFILL_EVENT,
-                    BucketRegistry)
+                    TRACE_AUTOTUNE_EVENT, BucketRegistry)
+from ...core.event import Event
+from ...kernels.autotune import ShapeKey, get_autotuner
+from ...models.attention import KVCache
 from .cache_manager import (BatchedCacheManager, CowBatch,
                             PagedCacheManager, insert_jit, paged_copy_jit,
                             paged_extract_jit, paged_gather_jit,
@@ -190,7 +193,8 @@ class ServeEngine:
                  fault_plan=None,
                  max_submission_retries: int = 2,
                  submission_backoff_s: float = 0.0,
-                 tracing: bool = True):
+                 tracing: bool = True,
+                 autotune: bool = False):
         """``budget`` is the decode position budget: prompt length + new
         tokens of any request must fit in it.  ``prefill_impl`` overrides
         ``cfg.attn_impl`` for prefill only (e.g. decode on the fused
@@ -200,11 +204,18 @@ class ServeEngine:
         provision), which is where the memory win comes from.
         ``prefix_sharing`` (paged mode only) maps identical full-page
         prompt prefixes onto already-resident pages with copy-on-write.
-        Partial prefill runs the XLA attention path only, so with an
-        effective pallas prefill sharing is disabled automatically —
-        mixing kernels between shared and unshared prefills would break
-        the bit-exactness contract silently; serve pallas decode with
-        ``prefill_impl="xla"`` to share prefixes.
+        Partial (prefix-shared) prefill runs the same attention impl as
+        one-shot prefill on every path — the flash kernel takes explicit
+        position planes — so sharing stays enabled under Pallas prefill
+        and shared/unshared prefills never mix kernels.
+
+        ``autotune`` switches both prefill and decode to
+        ``attn_impl="auto"``: every attention call resolves its shape
+        key through the kernel autotuner (kernels/autotune.py — measured
+        winners from the on-disk cache, deterministic cost model
+        otherwise), and :meth:`warmup` resolves the ladder's shape keys
+        eagerly, emitting one ``TRACE_AUTOTUNE`` event per key
+        (``engine.autotune_events``).
 
         ``buckets`` (on by default) draws every jitted step shape from
         the static bucket ladders instead of exact shapes — see the
@@ -233,10 +244,15 @@ class ServeEngine:
         self.budget = budget
         self.paged = paged
         self.page_size = page_size
+        if autotune:
+            cfg = dataclasses.replace(cfg, attn_impl="auto")
+            self.cfg = cfg
+            prefill_impl = "auto"
         pcfg = cfg if prefill_impl is None else \
             dataclasses.replace(cfg, attn_impl=prefill_impl)
-        if pcfg.attn_impl == "pallas":
-            prefix_sharing = False
+        self._pcfg = pcfg
+        self.autotune = bool(autotune)
+        self.autotune_events: List = []
         self.buckets = bool(buckets)
         self._registry = BucketRegistry(
             cfg, n_slots=n_slots, budget=budget,
@@ -319,12 +335,66 @@ class ServeEngine:
         self._n_compile_seen = len(evs)
         return new
 
+    def _warmup_autotune(self) -> None:
+        """Resolve the ladder's attention shape keys through the
+        autotuner before traffic: one ``TRACE_AUTOTUNE`` event per key,
+        named with the key and the chosen config.  Host-side lookups
+        only (measured cache / cost model) — sweeps run in the bench
+        lane, never implicitly here."""
+        if "auto" not in (self.cfg.attn_impl, self._pcfg.attn_impl):
+            return
+        tuner = get_autotuner()
+        import jax as _jax
+        backend = _jax.default_backend()
+        Hq, D = self.cfg.n_heads, self.cfg.head_dim
+        keys = []
+        # decode keys come from the standing cache's actual KV layouts
+        for leaf in _jax.tree.leaves(
+                self.cache_mgr.cache,
+                is_leaf=lambda x: isinstance(x, KVCache)):
+            if not isinstance(leaf, KVCache):
+                continue
+            # arenas may carry leading layer/stack axes: read the
+            # trailing (Hkv, span, D) regardless
+            if leaf.page_table is not None:
+                Hkv, ps = leaf.k.shape[-3], leaf.k.shape[-2]
+                S = int(leaf.page_table.shape[-1]) * int(ps)
+                keys.append(ShapeKey(
+                    "decode_paged", cache_len=S, q_len=1, q_heads=Hq,
+                    kv_heads=int(Hkv), head_dim=D, page_size=int(ps),
+                    dtype=str(leaf.k.dtype), backend=backend))
+            else:
+                Hkv, S = leaf.k.shape[-3], leaf.k.shape[-2]
+                keys.append(ShapeKey(
+                    "decode", cache_len=int(S), q_len=1, q_heads=Hq,
+                    kv_heads=int(Hkv), head_dim=D, page_size=0,
+                    dtype=str(leaf.k.dtype), backend=backend))
+        # one-shot prefill keys per length bucket (q_len == kv span)
+        for Lb in self._registry.lengths:
+            keys.append(ShapeKey(
+                "flash", cache_len=int(Lb), q_len=int(Lb), q_heads=Hq,
+                kv_heads=self.cfg.n_kv_heads, head_dim=D, page_size=0,
+                dtype=self.cfg.dtype, backend=backend))
+        for key in dict.fromkeys(keys):
+            ev = Event("Autotune", TRACE_AUTOTUNE_EVENT,
+                       name=f"{TRACE_AUTOTUNE_EVENT}:{key.encode()}")
+            ev.mark_start()
+            picked = tuner.choose(key)
+            ev.mark_end()
+            ev.name += f"→{picked.impl}" + (
+                f"[bq={picked.block_q},bkv={picked.block_kv}]"
+                if picked.impl == "pallas" else "")
+            self.autotune_events.append(ev)
+
     def warmup(self) -> None:
         """Eagerly compile the bucket ladders (optional): every decode
         width, every prefill length bucket and its ring alignment, so a
         serving process takes the compile hits before traffic instead of
         on first use.  Outputs are discarded — the standing cache and all
-        engine state are untouched."""
+        engine state are untouched.  Under ``autotune=True`` the ladder's
+        shape keys are resolved first, so the compiles below bake the
+        chosen configs in."""
+        self._warmup_autotune()
         reg = self._registry
         cache = self.cache_mgr.cache
         for W in reg.widths:
@@ -548,8 +618,10 @@ class ServeEngine:
         self.cache_mgr.update(packed)
         if self.paged:
             # publish this prompt's full-page blocks for later arrivals
-            # (host-side; the content lands via Admit-lane ordering)
-            self.cache_mgr.register_prefix(slot, tokens)
+            # (host-side; the content lands via Admit-lane ordering);
+            # the sequence's chain reuses the admission-time hashes
+            self.cache_mgr.register_prefix(slot, tokens,
+                                           chain=seq.prefix_chain)
         self.metrics.inc("prefills")
         if self.trace is not None:
             # any bucket that compiled during this admission served it
@@ -624,8 +696,10 @@ class ServeEngine:
                 shared_toks, shared_ids = 0, {}
                 need = head.pos
             else:
+                if head.prefix_chain is None:
+                    head.prefix_chain = P.PrefixChain(self.page_size)
                 shared_toks, shared_ids = self.cache_mgr.match_prefix(
-                    head.request.prompt)
+                    head.request.prompt, chain=head.prefix_chain)
                 need = head.prompt_len
             shared_pages = shared_toks // self.page_size
             # a prompt the arena could never hold fails *now* (structured

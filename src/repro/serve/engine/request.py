@@ -124,6 +124,11 @@ class Sequence:
     # prompt tokens served from already-resident shared prefix pages
     # (prefix sharing: their prefill was skipped; 0 = no sharing)
     shared_tokens: int = 0
+    # incremental prefix-hash chain (paging.PrefixChain) for this
+    # sequence's prompt: admission re-matches the queued head every tick
+    # and registration re-derives the keys — the chain makes both O(new
+    # pages) instead of O(prompt) hashing (lazily created by the engine)
+    prefix_chain: Optional[object] = None
 
     @property
     def rid(self) -> int:

@@ -166,6 +166,46 @@ class PageAllocator:
                 tuple(sorted(self._refs.items())))
 
 
+class PrefixChain:
+    """Incrementally materialized chain-key run of *one* token sequence.
+
+    :meth:`PrefixIndex.keys` recomputes the whole chain on every call —
+    fine for a single probe, wasteful when admission re-matches the same
+    queued prompt every scheduler tick and again at registration.  A
+    ``PrefixChain`` carries the running hash and the keys computed so
+    far, so re-requesting a prefix already walked costs zero hashes and
+    extending the chain is O(new pages).  The serve engine hangs one on
+    each queued sequence (ROADMAP item 4: incremental prefix hashing).
+
+    Contract: a chain is bound to one token sequence — always pass the
+    same ``tokens`` (or an extension of it).  Keys depend only on
+    (tokens, page_size), so one chain serves every same-page-size index.
+    """
+
+    def __init__(self, page_size: int):
+        assert page_size >= 1
+        self.page_size = page_size
+        self._h = b""                      # running hash over full pages
+        self._keys: List[bytes] = []
+        self.hashes = 0                    # blake2b invocations (tests)
+
+    def keys(self, tokens: Sequence[int],
+             n_pages: Optional[int] = None) -> List[bytes]:
+        """Chain keys of the first ``n_pages`` full pages of ``tokens``,
+        extending the cached run only past what was already computed."""
+        ps = self.page_size
+        avail = len(tokens) // ps
+        n_pages = avail if n_pages is None else min(n_pages, avail)
+        while len(self._keys) < n_pages:
+            t = len(self._keys)
+            blk = np.asarray(tokens[t * ps:(t + 1) * ps], np.int64)
+            self._h = hashlib.blake2b(self._h + blk.tobytes(),
+                                      digest_size=16).digest()
+            self.hashes += 1
+            self._keys.append(self._h)
+        return self._keys[:n_pages]
+
+
 class PrefixIndex:
     """Chain-hashed token-prefix → physical-page index (full pages only).
 
@@ -227,12 +267,17 @@ class PrefixIndex:
         prefix of ``tokens`` (possibly empty)."""
         return self.match_keys(self.keys(tokens))
 
-    def register(self, tokens: Sequence[int], pages: Sequence[int]) -> None:
+    def register(self, tokens: Sequence[int], pages: Sequence[int],
+                 keys=None) -> None:
         """Publish ``pages[t]`` as holding full-page prefix block ``t``
         of ``tokens``.  Idempotent: blocks whose key is already present
         (the shared pages a matching admission mapped by reference) are
-        skipped, as is a page already registered under another key."""
-        for key, page in zip(self.keys(tokens, len(pages)), pages):
+        skipped, as is a page already registered under another key.
+        ``keys``: precomputed chain keys for ``tokens`` (e.g. from a
+        :class:`PrefixChain`) — skips re-hashing the whole prefix."""
+        if keys is None:
+            keys = self.keys(tokens, len(pages))
+        for key, page in zip(keys, pages):
             page = int(page)
             assert page != PAGE_NULL, "cannot register the null page"
             if key in self._page_of or page in self._key_of:
@@ -565,7 +610,8 @@ def kv_resident_bytes(cache: Dict) -> int:
     return total
 
 
-__all__ = ["PAGE_NULL", "PageAllocator", "PrefixIndex", "kv_widths",
+__all__ = ["PAGE_NULL", "PageAllocator", "PrefixChain", "PrefixIndex",
+           "kv_widths",
            "paged_cache_init", "ring_to_page_blocks", "insert_pages",
            "extract_pages", "scrub_pages", "gather_prefix", "copy_pages",
            "gather_batch_rows", "scatter_batch_rows", "with_page_tables",

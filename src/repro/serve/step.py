@@ -57,6 +57,7 @@ PREFILL_EVENT = "PREFILL_KERNEL"
 DECODE_EVENT = "DECODE_KERNEL"
 ALIGN_EVENT = "ALIGN_CACHE"
 TRACE_COMPILE_EVENT = "TRACE_COMPILE"
+TRACE_AUTOTUNE_EVENT = "TRACE_AUTOTUNE"
 
 
 def _build_prefill_step(cfg: M.ModelConfig, ctx: Optional[ShardCtx] = None):
@@ -305,10 +306,14 @@ def _build_prefill_ext_bucket_step(cfg: M.ModelConfig,
     tail to ``tail_len``; the traced ``(true_prefix, true_len)`` pair
     masks both paddings.  Replaces the per-``(s, L-s)`` retrace of
     :func:`make_prefill_ext_step` with one program per bucket pair."""
-    # the T>1024 flash fallback in the collect path is causal by *index*,
-    # which mid-array prefix padding would break — stay on the masked path
-    assert prefix_pad + tail_len <= 1024, \
-        "bucketed partial prefill requires the position-masked XLA path"
+    # every collect-path impl must honor positions as *data* here (null
+    # pages sit mid-array with pos = -1): the Pallas flash kernel and the
+    # XLA reference both take explicit position planes, but the T>1024
+    # _xla_flash fallback is causal by index — cap the XLA path's span
+    assert cfg.attn_impl in ("pallas", "auto") \
+        or prefix_pad + tail_len <= 1024, \
+        "bucketed partial prefill on the xla impl requires the " \
+        "position-masked (≤1024-key) attention path"
     pcfg = dataclasses.replace(cfg, collect_kv=True)
 
     def prefill_ext_bucket(params, tokens, prefix_cache, true_prefix,
@@ -608,4 +613,4 @@ __all__ = ["make_prefill_step", "make_decode_step", "make_prefill_ext_step",
            "align_prefill_cache_dyn", "cache_slot_insert",
            "cache_slot_extract", "BucketRegistry", "width_ladder",
            "length_ladder", "PREFILL_EVENT", "DECODE_EVENT",
-           "ALIGN_EVENT", "TRACE_COMPILE_EVENT"]
+           "ALIGN_EVENT", "TRACE_COMPILE_EVENT", "TRACE_AUTOTUNE_EVENT"]

@@ -1,0 +1,219 @@
+"""Kernel autotuner: shape-keyed config selection with a persistent
+measured cache and a deterministic cost-model fallback.
+
+The contract under test: ``choose()`` is a pure host-side lookup (same
+key → same config, measured entries beat the model, model picks never
+touch disk), ``impl="auto"`` on the attention ops resolves to the XLA
+reference on CPU and is therefore *bit-identical* to ``impl="xla"``
+there, the split-combine epilogue of the decode kernel keys its jit
+trace on ``(num_splits,)`` — not on which (S, block_kv) produced it —
+and an autotuned ``ServeEngine`` resolves every standing shape at
+warmup while reproducing the untuned engine's streams byte-for-byte.
+"""
+
+import dataclasses
+import importlib
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as AT
+from repro.kernels.autotune import Autotuner, KernelConfig, ShapeKey
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models import model as M
+from repro.models.model import ModelConfig
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.step import TRACE_AUTOTUNE_EVENT
+
+KEY = jax.random.PRNGKey(7)
+
+TINY = ModelConfig(name="tiny-tune", family="dense", num_layers=2,
+                   d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                   d_ff=64, vocab=128, dtype="float32")
+
+
+@pytest.fixture()
+def fresh_tuner(tmp_path):
+    """Swap in a process-global tuner backed by a fresh temp file, so
+    ``impl="auto"`` tests never see a developer's measured cache."""
+    tuner = Autotuner(path=str(tmp_path / "autotune.json"))
+    AT.set_autotuner(tuner)
+    yield tuner
+    AT.set_autotuner(None)
+
+
+# -------------------------------------------------- cost model / cache ------
+
+def test_cost_model_deterministic(tmp_path):
+    """Same key → same pick, across independent instances; CPU always
+    resolves to the XLA reference (interpret-mode Pallas cannot win)."""
+    a = Autotuner(path=str(tmp_path / "a.json"))
+    b = Autotuner(path=str(tmp_path / "b.json"))
+    keys = [ShapeKey("decode", 256, 1, 8, 2, 64, backend=bk)
+            for bk in ("cpu", "tpu")]
+    keys += [ShapeKey("decode_paged", 64, 1, 8, 2, 64, page_size=8,
+                      backend="tpu"),
+             ShapeKey("flash", 1024, 1024, 8, 2, 64, backend="tpu")]
+    for k in keys:
+        assert a.choose(k) == b.choose(k) == a.cost_model(k)
+    assert a.choose(keys[0]) == KernelConfig(impl="xla")
+    # tpu decode: largest ladder block dividing S with a bounded split
+    assert a.choose(keys[1]) == KernelConfig("pallas", block_kv=256)
+    assert a.choose(keys[2]).block_kv == 8          # paged: page size
+    # cost-model picks are memoized in-process, never persisted
+    assert not (tmp_path / "a.json").exists()
+
+
+def test_candidates_include_xla_reference():
+    """The reference path is candidate 0 for every op — the tuner picks
+    a winner from a space that always contains it."""
+    t = Autotuner(path="/nonexistent/never-written.json")
+    for key in (ShapeKey("decode", 256, 1, 8, 2, 64),
+                ShapeKey("decode_paged", 64, 1, 8, 2, 64, page_size=4),
+                ShapeKey("flash", 512, 512, 8, 2, 64)):
+        cands = t.candidates(key)
+        assert cands[0] == KernelConfig(impl="xla")
+        assert any(c.impl == "pallas" for c in cands[1:])
+    # decode grids: every ladder block dividing S, plus S (one split)
+    blocks = [c.block_kv for c in t.candidates(
+        ShapeKey("decode", 256, 1, 8, 2, 64)) if c.impl == "pallas"]
+    assert blocks == [32, 64, 128, 256]
+
+
+def test_cache_round_trip(tmp_path):
+    """A measured winner persists: a brand-new Autotuner on the same
+    path returns it from ``choose`` with provenance and sweep intact —
+    and it beats what the cost model would have said."""
+    path = str(tmp_path / "autotune.json")
+    key = ShapeKey("decode", 256, 1, 8, 2, 64, backend="tpu")
+    win = KernelConfig("pallas", block_kv=64)       # not the model pick
+    sweep = [{"impl": "xla", "block_kv": 0, "tok_s": 10.0},
+             {"impl": "pallas", "block_kv": 64, "tok_s": 40.0}]
+    Autotuner(path=path).record(key, win, sweep=sweep)
+    t2 = Autotuner(path=path)
+    assert t2.choose(key) == win != t2.cost_model(key)
+    ent = t2.entry(key)
+    assert ent["source"] == "measured" and ent["sweep"] == sweep
+    data = json.load(open(path))
+    assert data["version"] == 1 and key.encode() in data["entries"]
+
+
+def test_corrupt_cache_tolerated(tmp_path):
+    """A truncated/garbage cache file degrades to the cost model — it
+    must never take the serving path down."""
+    path = tmp_path / "autotune.json"
+    path.write_text("{not json")
+    t = Autotuner(path=str(path))
+    key = ShapeKey("decode", 128, 1, 8, 2, 64, backend="cpu")
+    assert t.choose(key) == KernelConfig(impl="xla")
+    # and save() repairs it atomically
+    t.record(key, KernelConfig("pallas", block_kv=32))
+    assert json.load(open(path))["version"] == 1
+
+
+# ---------------------------------------------- auto ≡ resolved config ------
+
+def test_decode_auto_matches_xla_on_cpu(fresh_tuner):
+    """On CPU the tuner resolves decode ``auto`` → ``xla``, so the two
+    impls must be bit-identical (same program, not just close)."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 32, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, Hq, 1, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, Hkv, 1, D), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, Hkv, 1, D), jnp.float32)
+    pc = jnp.broadcast_to(jnp.where(jnp.arange(S)[None] < S // 2,
+                                    jnp.arange(S)[None], -1),
+                          (B, S)).astype(jnp.int32)
+    outs = {}
+    for impl in ("xla", "auto"):
+        o, *_ = decode_attention(q, kc, vc, pc, kn, vn,
+                                 jnp.int32(S // 2), impl=impl)
+        outs[impl] = np.asarray(o)
+    np.testing.assert_array_equal(outs["auto"], outs["xla"])
+    assert fresh_tuner.entry(
+        ShapeKey("decode", S, 1, Hq, Hkv, D, backend="cpu"))[
+            "source"] == "model"
+
+
+def test_flash_auto_matches_xla_on_cpu(fresh_tuner):
+    """Flash ``auto`` on CPU ≡ ``xla`` bit-for-bit, with and without
+    explicit position planes (the partial-prefill form)."""
+    B, Hq, Hkv, T, D = 1, 4, 2, 16, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, T, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, T, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, T, D), jnp.float32)
+    o_x = flash_attention(q, k, v, causal=True, impl="xla")
+    o_a = flash_attention(q, k, v, causal=True, impl="auto")
+    np.testing.assert_array_equal(np.asarray(o_a), np.asarray(o_x))
+    pos = jnp.arange(T, dtype=jnp.int32)[None, :]
+    o_xp = flash_attention(q, k, v, causal=True, impl="xla",
+                           q_pos=pos, k_pos=pos)
+    o_ap = flash_attention(q, k, v, causal=True, impl="auto",
+                           q_pos=pos, k_pos=pos)
+    np.testing.assert_array_equal(np.asarray(o_ap), np.asarray(o_xp))
+
+
+# ------------------------------------------- split-combine trace reuse ------
+
+def test_combine_trace_keyed_on_num_splits():
+    """The cross-block combine must retrace only when the *split count*
+    changes — not once per (S, block_kv) pair — or an autotune sweep
+    would pay one combine compile per candidate."""
+    # the package __init__ re-exports the function under the module's
+    # name, so reach the module's globals via importlib
+    dk = importlib.import_module(
+        "repro.kernels.decode_attention.decode_attention")
+    B, Hq, Hkv, D = 3, 6, 3, 16        # distinctive avals: no prior test
+    ks = jax.random.split(KEY, 5)      # can have warmed this trace
+
+    def run(S, block_kv):
+        q = jax.random.normal(ks[0], (B, Hq, 1, D), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+        kn = jax.random.normal(ks[3], (B, Hkv, 1, D), jnp.float32)
+        vn = jax.random.normal(ks[4], (B, Hkv, 1, D), jnp.float32)
+        pc = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+        o, *_ = decode_attention(q, kc, vc, pc, kn, vn, jnp.int32(S - 1),
+                                 impl="pallas", block_kv=block_kv)
+        jax.block_until_ready(o)
+
+    t0 = dk._combine_traces
+    run(64, 16)                        # nsplit = 4
+    assert dk._combine_traces == t0 + 1
+    run(128, 32)                       # nsplit = 4 again: cache hit
+    assert dk._combine_traces == t0 + 1
+    run(64, 32)                        # nsplit = 2: one new trace
+    assert dk._combine_traces == t0 + 2
+
+
+# ------------------------------------------------------ engine warmup -------
+
+def test_engine_autotune_streams_and_events(fresh_tuner):
+    """``ServeEngine(autotune=True)``: warmup resolves one config per
+    standing shape key (TRACE_AUTOTUNE events), and the served streams
+    are byte-identical to the untuned engine's."""
+    params = M.init_params(TINY, KEY)
+    rng = np.random.default_rng(5)
+    mk = lambda: [Request(i, [int(t) for t in rng2.integers(0, 128, 9)],
+                          6, arrival=i)
+                  for i, rng2 in enumerate(
+                      [np.random.default_rng(s) for s in (1, 2, 3)])]
+    base = ServeEngine(TINY, params, n_slots=2, budget=16, paged=True,
+                       page_size=4, prefill_impl="xla")
+    want = base.run(mk())
+    eng = ServeEngine(TINY, params, n_slots=2, budget=16, paged=True,
+                      page_size=4, prefill_impl="xla", autotune=True)
+    assert eng.cfg.attn_impl == "auto"
+    eng.warmup()
+    assert eng.autotune_events, "warmup resolved no shape keys"
+    for ev in eng.autotune_events:
+        assert ev.name.startswith(TRACE_AUTOTUNE_EVENT + ":")
+        assert "→xla" in ev.name       # cpu: reference wins every key
+    assert eng.run(mk()) == want

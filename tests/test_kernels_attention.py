@@ -65,6 +65,61 @@ def test_xla_flash_matches_ref(causal, win):
                                atol=3e-5, rtol=3e-5)
 
 
+# ------------------------------------ position planes / q_offset ----------
+# the partial-prefill form: the kernel masks from explicit q_pos/k_pos
+# int32 planes (-1 = padded) instead of index arithmetic
+
+def test_pos_planes_bit_identical_to_arithmetic():
+    """Explicit position planes describing the plain causal suffix must
+    be *bit-identical* to index-arithmetic mode on the same (S,
+    block_kv) partition — masked contributions are exact no-ops in the
+    online softmax."""
+    B, Hq, Hkv, T, S, D = 1, 4, 2, 32, 128, 64
+    q, k, v = mk(B, Hq, Hkv, T, S, D)
+    arith = flash_attention(q, k, v, causal=True)        # q_offset = S-T
+    qp = jnp.broadcast_to(jnp.arange(S - T, S, dtype=jnp.int32), (B, T))
+    kp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    planes = flash_attention(q, k, v, causal=True, q_pos=qp, k_pos=kp)
+    np.testing.assert_array_equal(np.asarray(planes), np.asarray(arith))
+
+
+def test_q_offset_suffix_rows_match_full_run():
+    """Rows are independent in attention: running only the suffix
+    queries (the ext-prefill shape, q_offset = S-T) must reproduce the
+    full run's suffix rows bit-for-bit."""
+    B, Hq, Hkv, S, D, s = 1, 4, 2, 128, 64, 96
+    q, k, v = mk(B, Hq, Hkv, S, S, D)
+    full = flash_attention(q, k, v, causal=True)
+    tail = flash_attention(q[:, :, s:], k, v, causal=True)
+    np.testing.assert_array_equal(np.asarray(tail),
+                                  np.asarray(full)[:, :, s:])
+
+
+@pytest.mark.parametrize("win", [None, 24])
+def test_pos_planes_masked_rows_vs_ref(win):
+    """Permuted k_pos (ring order) with -1 entries on both planes:
+    matches the position-aware oracle, masked q rows come out exactly
+    zero, and a window that fully masks early blocks must not poison
+    the softmax (the all-masked-block guard)."""
+    from repro.kernels.flash_attention.ref import attention_pos_ref
+    B, Hq, Hkv, T, S, D = 2, 4, 2, 64, 64, 32
+    q, k, v = mk(B, Hq, Hkv, T, S, D)
+    rng = np.random.default_rng(3)
+    kp = np.stack([rng.permutation(S) for _ in range(B)]).astype(np.int32)
+    kp[:, ::7] = -1                       # unwritten ring slots
+    qp = np.broadcast_to(np.arange(S, dtype=np.int32), (B, T)).copy()
+    qp[:, -5:] = -1                       # padded tail rows
+    qp_j, kp_j = jnp.asarray(qp), jnp.asarray(kp)
+    out = flash_attention(q, k, v, causal=True, window=win,
+                          q_pos=qp_j, k_pos=kp_j,
+                          block_q=32, block_kv=16)
+    ref = attention_pos_ref(q, k, v, qp_j, kp_j, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    assert not np.any(np.asarray(out)[:, :, -5:]), \
+        "masked q rows must be exact zeros"
+
+
 def test_xla_flash_unroll_equals_scan():
     q, k, v = mk(1, 2, 2, 128, 128, 32)
     pos = jnp.arange(128)

@@ -130,14 +130,42 @@ def test_prefix_index_chain_match_and_forget():
     assert idx.match(toks) == [5, 11, 9]
 
 
+def test_prefix_chain_incremental_hashing():
+    """PrefixChain memoizes the running chain: re-requesting a prefix
+    already walked costs zero new digests, extending hashes only the new
+    full pages, and the keys agree with PrefixIndex's from-scratch
+    generator — so the engine's every-tick re-match of a queued head is
+    O(new pages), not O(prompt)."""
+    ps = 4
+    rng = np.random.default_rng(11)
+    toks = [int(t) for t in rng.integers(0, 128, 40)]
+    chain = P.PrefixChain(ps)
+    k5 = chain.keys(toks, 5)
+    assert chain.hashes == 5
+    assert chain.keys(toks, 5) == k5           # re-match: zero hashing
+    assert chain.hashes == 5
+    k10 = chain.keys(toks, 10)
+    assert chain.hashes == 10                  # extension: new pages only
+    assert k10[:5] == k5
+    assert k10 == list(P.PrefixIndex(ps).keys(toks, 10))
+    # n_pages caps at the full pages available; None means all of them
+    assert chain.keys(toks) == k10
+    assert chain.hashes == 10
+
+
 # ------------------------------------- partial prefill ≡ full prefill ------
 
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
 @pytest.mark.parametrize("cfg", [DENSE, HYBRID], ids=["full", "swa+full"])
-def test_prefill_ext_matches_full_prefill(cfg):
+def test_prefill_ext_matches_full_prefill(cfg, impl):
     """Resuming a prefill mid-prompt from a bit-exact prefix cache must
     reproduce the one-shot prefill exactly: same last-token logits, same
     collected cache bits — the property that makes shared-prefix streams
-    indistinguishable from unshared ones."""
+    indistinguishable from unshared ones.  Pinned per impl: the pallas
+    flash path runs the ext step with explicit position planes, which
+    must be bit-identical to its own one-shot prefill (same ``(S,
+    block_kv)`` partition ⇒ masked contributions are exact no-ops)."""
+    cfg = dataclasses.replace(cfg, attn_impl=impl)
     params = M.init_params(cfg, KEY)
     prefill = make_prefill_step(cfg)
     prefill_ext = make_prefill_ext_step(cfg)
@@ -221,19 +249,28 @@ def test_cow_divergence_streams_bit_identical(impl):
         assert alloc.n_held == 0, kind
 
 
-def test_sharing_auto_disabled_with_pallas_prefill():
-    """Partial prefill runs XLA attention only: an effective pallas
-    prefill must switch sharing off (mixed kernels between shared and
-    unshared prefills would silently break bit-exactness), while a
-    pallas *decode* with prefill_impl="xla" keeps it on."""
+def test_sharing_stays_enabled_with_pallas_prefill():
+    """Partial prefill now runs the flash kernel with explicit position
+    planes, so an effective pallas prefill keeps sharing ON (the PR 5
+    auto-disable is gone): shared streams must be bit-identical to the
+    unshared pallas engine (same kernel, same block partition — masked
+    contributions are exact no-ops) and to the XLA lockstep oracle."""
     cfg = dataclasses.replace(DENSE, attn_impl="pallas")
     params = M.init_params(cfg, KEY)
-    eng = ServeEngine(cfg, params, n_slots=2, budget=16, paged=True,
+    pre = sys_prompt(8)                          # 2 full pages at ps=4
+    mk = lambda: [Request(0, pre + [5, 9], 8, arrival=0),
+                  Request(1, pre + [7, 3], 8, arrival=0)]
+    eng = ServeEngine(cfg, params, n_slots=2, budget=24, paged=True,
                       page_size=4)
-    assert not eng.cache_mgr.sharing
-    eng = ServeEngine(cfg, params, n_slots=2, budget=16, paged=True,
-                      page_size=4, prefill_impl="xla")
-    assert eng.cache_mgr.sharing
+    assert eng.cache_mgr.sharing, \
+        "pallas prefill must no longer auto-disable prefix sharing"
+    shared = check_streams(cfg, params, eng, mk(), 24)
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["shared_tokens"] == 8
+    unshared_eng = ServeEngine(cfg, params, n_slots=2, budget=24,
+                               paged=True, page_size=4,
+                               prefix_sharing=False)
+    assert unshared_eng.run(mk()) == shared
 
 
 def test_sharing_disabled_matches_and_pays_full_prefill():
