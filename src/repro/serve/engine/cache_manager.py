@@ -228,6 +228,151 @@ class PagedCacheManager:
             return 0, {}
         return m * self.page_size, {kind: r[:m] for kind, r in runs.items()}
 
+    def exclusive_pages(self, slot: int) -> int:
+        """Pages (all kinds) only ``slot``'s table references — the
+        pages a preemption of this slot would actually return to the
+        free list.  Evicting a sequence whose pages are mostly shared
+        (refcount > 1) relieves almost no pool pressure, so the engine's
+        victim score is dominated by this count (DESIGN.md
+        "Sharing-aware scheduling")."""
+        n = 0
+        for kind in self.widths:
+            alloc = self.alloc[kind]
+            for p in self.tables[kind][slot]:
+                if p != P.PAGE_NULL and alloc.refcount(p) == 1:
+                    n += 1
+        return n
+
+    def pin_shared_prefix(self, slot: int, tokens, chain=None
+                          ) -> Tuple[int, Dict[str, List[int]]]:
+        """Pin (refcount++) the leading run of ``slot``'s *genuinely
+        shared* prefix pages across a preemption: pages that are (a)
+        still registered in the prefix index under the slot's own chain
+        keys and (b) referenced by another holder too (refcount > 1).
+        Returns ``(pinned_tokens, {kind: page run})`` — the pin keeps
+        those pages resident and registered until the sequence resumes
+        (``match_resume`` finds them again and maps them by reference)
+        or dies (``release_pinned``), even if every co-sharer retires in
+        between.  Restricting pins to refcount > 1 pages means the
+        preemption frees exactly the pages it would have freed anyway —
+        pinning never blunts pool relief.  ``tokens`` is the sequence's
+        *written* token run (prompt + decode-written outputs)."""
+        if not self.sharing:
+            return 0, {}
+        L = len(tokens)
+        if any(L > W for W in self.widths.values()):
+            return 0, {}        # a wrapped ring holds no logical prefix
+        cap = L // self.page_size
+        if cap <= 0:
+            return 0, {}
+        if chain is not None:
+            keys = chain.keys(tokens, cap)
+        else:
+            keys = list(next(iter(self.prefix.values())).keys(tokens, cap))
+        m = cap
+        for kind, idx in self.prefix.items():
+            row = self.tables[kind][slot]
+            k = 0
+            while k < m:
+                page = int(row[k])
+                if (page == P.PAGE_NULL or
+                        self.alloc[kind].refcount(page) <= 1 or
+                        idx.page_for(keys[k]) != page):
+                    break
+                k += 1
+            m = k
+            if m == 0:
+                return 0, {}
+        kept: Dict[str, List[int]] = {}
+        for kind in self.widths:
+            run = [int(p) for p in self.tables[kind][slot][:m]]
+            for p in run:
+                self.alloc[kind].share(p)
+            kept[kind] = run
+        return m * self.page_size, kept
+
+    def release_pinned(self, kept: Dict[str, List[int]]
+                       ) -> Dict[str, np.ndarray]:
+        """Drop the pin references of a :meth:`pin_shared_prefix` run
+        (resume re-shared the pages through ``admit_pages``, or the
+        sequence died, or the engine spilled the pins to un-wedge
+        admission).  Returns the per-kind freed-page report in
+        :meth:`release_slot`'s padded layout — non-null entries are
+        pages that reached refcount 0 and must be scrubbed before
+        reuse."""
+        out: Dict[str, np.ndarray] = {}
+        for kind in self.widths:
+            freed = self.alloc[kind].free(kept.get(kind, ()))
+            if self.sharing:
+                for p in freed:
+                    self.prefix[kind].forget(p)
+            padded = np.full(self.n_ptes[kind], P.PAGE_NULL, np.int32)
+            padded[:len(freed)] = freed
+            out[kind] = padded
+        return out
+
+    def match_resume(self, tokens, chain=None
+                     ) -> Tuple[int, Dict[str, List[int]]]:
+        """Longest registered full-page prefix of a *resuming*
+        sequence's written tokens — the swap-in analogue of
+        :meth:`match_prefix`.  Differences: the cap is ``len(tokens) //
+        page_size`` (nothing needs to be prefilled — the swap blob
+        restores the remainder — so the final token need not be held
+        back), and the wrap gate is on the written length itself (a
+        sequence that wrapped some ring restores everything from the
+        blob).  Matched pages are mapped by reference by
+        ``admit_pages``; the pages the preemption pinned are a prefix of
+        this match by construction (pins keep their registrations
+        alive), so a preempt → resume cycle re-attaches to at least
+        everything it was sharing before."""
+        L = len(tokens)
+        if not self.sharing or any(L > W for W in self.widths.values()):
+            return 0, {}
+        cap = L // self.page_size
+        if cap <= 0:
+            return 0, {}
+        if chain is not None:
+            keys = chain.keys(tokens, cap)
+        else:
+            keys = list(next(iter(self.prefix.values())).keys(tokens, cap))
+        runs = {kind: idx.match_keys(keys)
+                for kind, idx in self.prefix.items()}
+        m = min(len(r) for r in runs.values())
+        if m <= 0:
+            return 0, {}
+        return m * self.page_size, {kind: r[:m] for kind, r in runs.items()}
+
+    def register_decode_page(self, slot: int, tokens, chain=None) -> None:
+        """Publish the decode-produced page that just closed — the page
+        holding positions ``[L - page_size, L)`` of ``tokens`` (the
+        sequence's written prompt + output run, ``L`` a page multiple) —
+        so later prompts that extend this sequence's prompt *and output*
+        share past the prompt (agentic fan-out).  Only the single
+        just-closed page is registered: earlier pages may have been
+        CoW'd or wrapped since their close, so a whole-row registration
+        would publish stale keys.  The closing write itself guarantees
+        the page is exclusively held (a shared page is never written —
+        CoW redirects first), and content equality with a prefill of the
+        same tokens is the conformance suite's decode≡prefill bit-
+        exactness invariant."""
+        if not self.sharing:
+            return
+        L = len(tokens)
+        t = L // self.page_size - 1
+        if t < 0:
+            return
+        for kind, idx in self.prefix.items():
+            if L > self.widths[kind]:
+                continue            # this ring wrapped: page t is stale
+            page = int(self.tables[kind][slot, t])
+            if page == P.PAGE_NULL:
+                continue
+            if chain is not None:
+                key = chain.keys(tokens, t + 1)[t]
+            else:
+                key = list(idx.keys(tokens, t + 1))[t]
+            idx.register(tokens, [page], keys=[key])
+
     def can_ever_admit(self, n_positions: int,
                        shared_pages: int = 0) -> bool:
         """False iff a sequence with ``n_positions`` written positions

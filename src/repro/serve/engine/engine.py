@@ -33,9 +33,14 @@ page blocks and *donated* into the arenas — no slot-shaped copy exists),
 decode grows each sequence one page at a time, and retirement returns
 pages to the free list.  The scheduler gate becomes *pages free* rather
 than slots free, and on pool exhaustion the engine **preempts the
-youngest sequence** (latest arrival; ties by rid): its page blocks are
-swapped out verbatim, its pages freed, and it re-queues at the *front*
-of the wait queue, so resumption restores the exact cache bits and the
+sequence that frees the most pages** — the victim score is dominated by
+*exclusive* pages reclaimed (``PagedCacheManager.exclusive_pages``;
+evicting a fully-shared sequence frees almost nothing), tie-broken by
+youngest arrival then rid for determinism.  The victim's page blocks
+are swapped out verbatim, its exclusive pages freed (genuinely shared
+prefix pages are *pinned* — kept resident and registered — so resume
+re-attaches to them by reference), and it re-queues at the *front* of
+the wait queue, so resumption restores the exact cache bits and the
 output stream is bit-identical to an uninterrupted run.  Swapped blocks
 stay device-resident (host offload is an open item) — preemption
 relieves *pool* pressure, which is the contended resource.
@@ -171,7 +176,7 @@ COW_EVENT = "PAGE_COW"
 COUNTER_METRICS = ("decode_steps", "decoded_tokens", "prefills",
                    "preemptions", "swap_ins", "prefill_tokens",
                    "shared_tokens", "prefix_hits", "cow_copies",
-                   "failures", "compiles_total")
+                   "resume_shared_tokens", "failures", "compiles_total")
 # tick-based latency histograms (unit: engine ticks — deterministic,
 # identical across numeric backends); recorded only while tracing
 HISTOGRAM_METRICS = ("ttft_ticks", "tbt_ticks", "queue_wait_ticks",
@@ -290,6 +295,11 @@ class ServeEngine:
         self._pos = np.full((n_slots,), -1, np.int32)
         self._slot_seq: Dict[int, Sequence] = {}
         self.sequences: List[Sequence] = []
+        # the *live* (non-terminal) subset, insertion-ordered — the only
+        # sequences the per-tick reap and the done check walk, so per-
+        # tick host work stays O(live), not O(total-ever-submitted), on
+        # a long-running server (identity-keyed: Sequence is eq=False)
+        self._live: Dict[int, Sequence] = {}
         self.tick = 0       # == ticks elapsed; steps/tokens in stats
         self.tracing = bool(tracing)
         self.metrics = MetricsRegistry()
@@ -428,16 +438,18 @@ class ServeEngine:
         if self.trace is not None:
             self.trace.begin(seq.rid, self.tick)
         self.sequences.append(seq)
+        self._live[id(seq)] = seq
         return seq
 
     @property
     def done(self) -> bool:
-        return all(s.status.terminal for s in self.sequences)
+        return not self._live
 
     # -- lifecycle -------------------------------------------------------
     def _retire(self, seq: Sequence) -> None:
         seq.status = Status.FINISHED
         seq.finished_at = self.tick
+        self._live.pop(id(seq), None)
         if self.tracing:
             e2e = self.tick - seq.submitted_at
             self.metrics.observe("e2e_ticks", e2e)
@@ -472,22 +484,45 @@ class ServeEngine:
             self._release_slot(seq.slot)
         else:
             self.scheduler.remove(seq)
+        if seq.kept_pages:
+            # a preempted sequence dies holding prefix pins: drop them
+            # (and scrub any page that reaches refcount 0) so failure
+            # stays refcount-exact — co-sharers keep their pages
+            self._drop_pins(seq)
         seq.swap = None
         seq.slot = -1
         seq.status = Status.FAILED
         seq.error = err
         seq.finished_at = self.tick
+        self._live.pop(id(seq), None)
         self.metrics.inc("failures")
         if self.trace is not None:
             self.trace.fail(seq.rid, self.tick, detail=err_string(err.code))
+
+    def _drop_pins(self, seq: Sequence) -> None:
+        """Release a preempted sequence's pinned prefix pages (resume
+        completed, the sequence died, or admission spilled the pins to
+        relieve pool pressure), scrubbing any page that reached
+        refcount 0 before it can be reused."""
+        freed = self.cache_mgr.release_pinned(seq.kept_pages)
+        seq.kept_pages = None
+        seq.kept_tokens = 0
+        if any((row != P.PAGE_NULL).any() for row in freed.values()):
+            cache = self.q_admit.enqueue(
+                paged_scrub_jit, self.cfg, self.cache_mgr.cache, freed,
+                name=SCRUB_EVENT, command_type=SCRUB_EVENT)
+            self.cache_mgr.update(cache)
+            self._link(seq, self.q_admit)
 
     def _reap(self) -> List[Sequence]:
         """Deadline/cancellation sweep, run at the top of every tick:
         fail any non-terminal sequence whose client cancelled it or
         whose ``deadline_ticks`` budget has expired (cancellation wins
-        when both apply the same tick)."""
+        when both apply the same tick).  Walks the live set only —
+        per-tick cost is independent of how many sequences have ever
+        been served."""
         failed = []
-        for seq in self.sequences:
+        for seq in list(self._live.values()):
             if seq.status.terminal:
                 continue
             if seq.cancel_requested:
@@ -636,23 +671,49 @@ class ServeEngine:
         t0 = int(self._sample(lg)[0])
         self._bind(seq, slot, t0)
 
-    def _swap_in(self, seq: Sequence, slot: int) -> None:
+    def _swap_in(self, seq: Sequence, slot: int,
+                 shared_toks: int = 0) -> None:
         """Resume a preempted sequence: scatter its swapped page blocks
         into freshly bound pages and restore its decode inputs verbatim
-        (bit-identical to never having been preempted)."""
+        (bit-identical to never having been preempted).
+
+        ``shared_toks`` is the re-matched prefix (``match_resume``): the
+        first ``shared_toks // page_size`` table entries were mapped by
+        reference by ``admit_pages``, so the restore scatter *skips*
+        them (their blob blocks sink into the null page — the resident
+        copies are already canonical, and a scatter into them would be a
+        write to refcount>1 pages).  Only the exclusive remainder is
+        restored from the blob — a preempt → resume cycle no longer
+        duplicates shared prefix pages into private copies."""
         if self.trace is not None:
             self.trace.transition(seq.rid, SpanKind.SWAP, self.tick)
+        ids = self.cache_mgr.table_ids(slot)
+        if shared_toks:
+            m = shared_toks // self.page_size
+            for kind in ids:
+                ids[kind][:m] = P.PAGE_NULL
+            self.metrics.inc("resume_shared_tokens", shared_toks)
         packed = self.q_admit.enqueue(
             paged_insert_jit, self.cfg, self.cache_mgr.cache, seq.swap,
-            self.cache_mgr.table_ids(slot), jnp.int32(slot),
+            ids, jnp.int32(slot),
             name=SWAP_IN_EVENT, command_type=SWAP_IN_EVENT)
         self._link(seq, self.q_admit)
         self.cache_mgr.update(packed)
         seq.swap = None
         self.metrics.inc("swap_ins")
         seq.status = Status.ACTIVE
+        if self.tracing:
+            # the preempted wait is a real queue wait: without this the
+            # queue_wait_ticks histogram under-reports preemption-heavy
+            # traces (the first wait was observed at first admission)
+            self.metrics.observe("queue_wait_ticks",
+                                 self.tick - seq.preempted_at)
         seq.admitted_at = self.tick
         self._slot_seq[slot] = seq
+        if seq.kept_pages:
+            # admission re-shared the still-matched pages (refcount++),
+            # so the preemption-time pins are now redundant — drop them
+            self._drop_pins(seq)
         if self.trace is not None:
             # resume the interrupted token's service interval: same
             # token_index as the span the preemption cut short
@@ -691,9 +752,15 @@ class ServeEngine:
                 break
             resume = head.status is Status.PREEMPTED
             if resume:
-                # resumption restores swapped bits into fresh pages
-                # verbatim; it never re-attaches to shared prefixes
-                shared_toks, shared_ids = 0, {}
+                # re-match the resumed sequence's *written* token run
+                # against the prefix index: still-resident prefix pages
+                # (including everything the preemption pinned) are
+                # mapped by reference and only the exclusive remainder
+                # is restored from the swap blob
+                if head.prefix_chain is None:
+                    head.prefix_chain = P.PrefixChain(self.page_size)
+                shared_toks, shared_ids = self.cache_mgr.match_resume(
+                    head.written_tokens, chain=head.prefix_chain)
                 need = head.pos
             else:
                 if head.prefix_chain is None:
@@ -720,13 +787,21 @@ class ServeEngine:
             # remainder must be free
             if not self.cache_mgr.can_admit(need,
                                             shared_pages=shared_pages):
+                # with no active sequence to preempt, the only pages the
+                # pool can still give back are prefix pins held by other
+                # preempted sequences — spill the youngest pinner's pins
+                # (it resumes last) and re-evaluate, so pinning can
+                # never wedge admission the pre-pin engine would have
+                # served
+                if not self._slot_seq and self._spill_one_pin(head):
+                    continue
                 break
             seq, slot = self.scheduler.pop_bind()
             ok = self.cache_mgr.admit_pages(slot, need, shared=shared_ids)
             assert ok, "gate passed but allocation failed"
             try:
                 if resume:
-                    self._swap_in(seq, slot)
+                    self._swap_in(seq, slot, shared_toks)
                 else:
                     self._prefill_admit(seq, slot, shared_toks, shared_ids)
             except ReproError as e:
@@ -734,23 +809,54 @@ class ServeEngine:
             admitted.append(seq)
         return admitted
 
+    def _spill_one_pin(self, head: Sequence) -> bool:
+        """Release one preempted sequence's pinned prefix pages to
+        relieve pool pressure when admission is gated with no active
+        victim left.  Spills youngest (latest arrival, ties by rid)
+        first so ``head`` — the next to resume — keeps its pins longest;
+        True iff a pin set was spilled (the caller re-gates)."""
+        pinners = [s for s in self._live.values()
+                   if s.status is Status.PREEMPTED and s.kept_pages]
+        if not pinners:
+            return False
+        victim = max(pinners, key=lambda s: (s is not head,
+                                             s.request.arrival, s.rid))
+        self._drop_pins(victim)
+        return True
+
     # -- paged-pool pressure ---------------------------------------------
     def _preempt_one(self) -> Sequence:
-        """Evict the youngest active sequence (latest arrival, ties by
-        rid): swap its page blocks out, free its pages, requeue it at the
-        front.  Returns the victim."""
+        """Evict the active sequence whose eviction frees the most pool
+        pages: the victim score is dominated by *exclusive* pages
+        reclaimed (``exclusive_pages`` — a fully-shared sequence frees
+        ~0 pages and is never chosen over one holding private pages),
+        tie-broken by youngest arrival then rid for determinism (which
+        is exactly the old policy whenever scores tie, e.g. with sharing
+        off).  The victim's genuinely shared prefix pages are *pinned*
+        before its row references drop — they stay resident and
+        registered so resumption re-attaches by reference — then its
+        page blocks are swapped out, its exclusive pages freed, and it
+        requeues at the front.  Returns the victim."""
         cands = list(self._slot_seq.values())
         if len(cands) <= 1:
             raise RuntimeError(
                 "paged pool exhausted with a single active sequence — "
                 "the arena cannot hold one budget-length request")
-        victim = max(cands, key=lambda s: (s.request.arrival, s.rid))
+        mgr = self.cache_mgr
+        victim = max(cands, key=lambda s: (mgr.exclusive_pages(s.slot),
+                                           s.request.arrival, s.rid))
         slot = victim.slot
         if self.trace is not None:
             # transition first so the swap-out + scrub events land on
             # the PREEMPTED span, not the interrupted DECODE span
             self.trace.transition(victim.rid, SpanKind.PREEMPTED,
                                   self.tick)
+        victim.kept_tokens, victim.kept_pages = mgr.pin_shared_prefix(
+            slot, victim.written_tokens, chain=victim.prefix_chain)
+        # the blob is the full row — blocks for pinned pages are
+        # redundant (registered pages are immutable, so the blob copy
+        # equals the live bits) but keep the extract shape uniform and
+        # make pin-spilling safe: a spilled resume restores everything
         victim.swap = self.q_admit.enqueue(
             paged_extract_jit, self.cfg, self.cache_mgr.cache,
             self.cache_mgr.table_ids(slot), jnp.int32(slot),
@@ -758,6 +864,7 @@ class ServeEngine:
         self._link(victim, self.q_admit)
         victim.next_tok = int(self._tokens[slot, 0])
         victim.status = Status.PREEMPTED
+        victim.preempted_at = self.tick
         victim.preemptions += 1
         victim.slot = -1
         self._release_slot(slot)
@@ -926,6 +1033,14 @@ class ServeEngine:
                 self._retire(seq)
                 finished.append(seq)
             else:
+                if self.paged and self.cache_mgr.sharing and \
+                        seq.pos % self.page_size == 0:
+                    # a full page of decode-produced tokens just closed:
+                    # publish it so later prompts extending this
+                    # sequence's prompt + output share past the prompt
+                    # (agentic fan-out; CoW handles divergence)
+                    self.cache_mgr.register_decode_page(
+                        slot, seq.written_tokens, chain=seq.prefix_chain)
                 self._tokens[slot, 0] = tok
                 self._pos[slot] = seq.pos
         return finished

@@ -94,9 +94,14 @@ class Request:
                 f"got {self.deadline_ticks}")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Sequence:
-    """Engine-side mutable state of one request."""
+    """Engine-side mutable state of one request.
+
+    ``eq=False`` keeps identity semantics: sequences live in the
+    scheduler's wait queue, the engine's live set and tombstone sets —
+    two distinct sequences must never compare (or hash) equal just
+    because a client submitted the same prompt twice."""
     request: Request
     status: Status = Status.QUEUED
     slot: int = -1                    # batch slot while ACTIVE, else -1
@@ -121,6 +126,15 @@ class Sequence:
     swap: Optional[object] = None
     next_tok: int = -1
     preemptions: int = 0
+    preempted_at: int = -1            # tick of the latest preemption —
+                                      # the resume queue wait observed by
+                                      # queue_wait_ticks on swap-in
+    # shared prefix pages *pinned* across a preemption (refcount held by
+    # the preempted sequence itself, {kind: [page ids]}): resumption
+    # re-matches the prefix and maps these by reference instead of
+    # duplicating them from the swap blob
+    kept_pages: Optional[object] = None
+    kept_tokens: int = 0
     # prompt tokens served from already-resident shared prefix pages
     # (prefix sharing: their prefill was skipped; 0 = no sharing)
     shared_tokens: int = 0
@@ -137,6 +151,17 @@ class Sequence:
     @property
     def prompt_len(self) -> int:
         return len(self.request.prompt)
+
+    @property
+    def written_tokens(self) -> List[int]:
+        """The tokens whose K/V is actually written in the cache:
+        positions ``[0, pos)`` — the prompt plus every decode-*written*
+        output.  The latest emitted token is the pending decode input
+        (its K/V lands on the next tick), so it is excluded.  This is
+        the token sequence swap-in prefix re-matching and decode-page
+        registration hash over."""
+        return (list(self.request.prompt) +
+                self.out_tokens[:max(0, self.pos - self.prompt_len)])
 
     def cancel(self) -> None:
         """Ask the engine to abandon this sequence.  Takes effect at the

@@ -24,6 +24,14 @@ batch width).  The scheduler owns the slot ⇄ request binding:
   the next admission reuses it (the whole point of continuous batching:
   a retired slot turns into fresh work without draining the batch).
 
+Every operation is O(log n_slots) or better on a long-running server:
+the free list is a heap *mirrored by a set* (O(1) double-release
+detection instead of an O(n) list scan), and ``remove`` tombstones the
+sequence (O(1)) instead of scanning the deque — ``peek``/``pop_bind``
+lazily discard tombstoned heads, so a withdrawal costs O(1) now and
+O(1) amortized later, never O(queue).  Sequences hash by identity
+(``Sequence`` is ``eq=False``), so set membership is pointer equality.
+
 The scheduler is deliberately host-side and tiny: admission policy is a
 pure data-structure decision, all device work (prefill, cache packing,
 decode) happens in the engine on dispatch-queue lanes.
@@ -33,7 +41,7 @@ from __future__ import annotations
 
 import heapq
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, List, Optional, Set, Tuple
 
 from .request import Request, Sequence
 
@@ -44,33 +52,49 @@ class SlotScheduler:
         self.n_slots = n_slots
         self._free: List[int] = list(range(n_slots))
         heapq.heapify(self._free)
+        self._free_set: Set[int] = set(self._free)
         self._waiting: Deque[Sequence] = deque()
+        # logically waiting sequences (mirror of the deque minus
+        # tombstones): O(1) membership for remove()
+        self._queued: Set[Sequence] = set()
+        # sequences logically withdrawn but still physically queued —
+        # discarded lazily when they surface at the head
+        self._tombstones: Set[Sequence] = set()
 
     # -- queue side ------------------------------------------------------
     def submit(self, request: Request) -> Sequence:
         seq = Sequence(request)
         self._waiting.append(seq)
+        self._queued.add(seq)
         return seq
 
     def requeue_front(self, seq: Sequence) -> None:
         """Put a preempted sequence at the head of the wait queue (it
         resumes before any fresh admission)."""
+        self._tombstones.discard(seq)
         self._waiting.appendleft(seq)
+        self._queued.add(seq)
 
     def remove(self, seq: Sequence) -> bool:
         """Withdraw a waiting sequence (cancellation / deadline expiry /
         admission failure): it leaves the queue without ever binding a
         slot.  True iff it was waiting (False = not in this queue; the
-        caller decides whether that is a bug)."""
-        try:
-            self._waiting.remove(seq)
-            return True
-        except ValueError:
+        caller decides whether that is a bug).  O(1): the entry is
+        tombstoned and physically dropped when it reaches the head."""
+        if seq not in self._queued:
             return False
+        self._queued.discard(seq)
+        self._tombstones.add(seq)
+        return True
+
+    def _drop_tombstoned_head(self) -> None:
+        """Physically discard withdrawn sequences sitting at the head."""
+        while self._waiting and self._waiting[0] in self._tombstones:
+            self._tombstones.discard(self._waiting.popleft())
 
     @property
     def n_waiting(self) -> int:
-        return len(self._waiting)
+        return len(self._queued)
 
     @property
     def n_free(self) -> int:
@@ -80,12 +104,13 @@ class SlotScheduler:
     def admit(self) -> List[Tuple[Sequence, int]]:
         """Bind waiting sequences to free slots (FIFO × lowest-slot)."""
         admitted: List[Tuple[Sequence, int]] = []
-        while self._waiting and self._free:
+        while self.peek() is not None:
             admitted.append(self.pop_bind())
         return admitted
 
     def peek(self) -> Optional[Sequence]:
         """Head of the wait queue if a slot is free for it, else None."""
+        self._drop_tombstoned_head()
         if self._waiting and self._free:
             return self._waiting[0]
         return None
@@ -93,15 +118,19 @@ class SlotScheduler:
     def pop_bind(self) -> Tuple[Sequence, int]:
         """Pop the queue head and bind it to the lowest free slot (the
         caller gates via :meth:`peek` first)."""
+        self._drop_tombstoned_head()
         slot = heapq.heappop(self._free)
+        self._free_set.discard(slot)
         seq = self._waiting.popleft()
+        self._queued.discard(seq)
         seq.slot = slot
         return seq, slot
 
     def release(self, slot: int) -> None:
         assert 0 <= slot < self.n_slots
-        assert slot not in self._free, f"slot {slot} double-released"
+        assert slot not in self._free_set, f"slot {slot} double-released"
         heapq.heappush(self._free, slot)
+        self._free_set.add(slot)
 
 
 __all__ = ["SlotScheduler"]

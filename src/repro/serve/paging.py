@@ -215,8 +215,12 @@ class PrefixIndex:
     and stops at the first miss, returning the longest registered
     full-page prefix run.  Host-side and tiny, like the allocator.
 
-    Content contract: a registered page still holds the bit-exact
-    prefill K/V of its token prefix.  The pool maintains it by
+    Content contract: a registered page still holds the bit-exact K/V
+    of its token prefix — whether prefill wrote it in one shot or the
+    decode loop closed it token by token (the serve engine registers
+    decode-produced pages too, and the conformance suite pins
+    decode-written K/V bit-identical to prefill-written K/V for the
+    same token sequence).  The pool maintains it by
     deregistering a page on every in-place write (a page is writable
     iff refcount == 1) and when the page returns to the free list;
     copy-on-write *sources* stay registered — they keep their pristine
@@ -284,6 +288,13 @@ class PrefixIndex:
                 continue
             self._page_of[key] = page
             self._key_of[page] = key
+
+    def page_for(self, key) -> Optional[int]:
+        """The physical page registered under ``key`` (None if absent) —
+        lets the cache manager test whether a *specific* page still backs
+        a chain key (preemption pins only pages the index would actually
+        hand back on re-match)."""
+        return self._page_of.get(key)
 
     def forget(self, page) -> None:
         """Drop ``page``'s registration (no-op if unregistered): called

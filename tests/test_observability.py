@@ -266,6 +266,26 @@ class TestEngineSpans:
                 assert life[i + 2].kind is SpanKind.DECODE
                 assert life[i + 2].token_index == life[i - 1].token_index
 
+    def test_resume_observes_preempted_queue_wait(self):
+        """A preempt → resume cycle is a real queue wait: the histogram
+        must gain one observation per swap-in on top of one per
+        admission (the old code reset ``admitted_at`` on resume without
+        observing the wait, so preemption-heavy traces under-reported
+        queue_wait_ticks)."""
+        plan = FaultPlan(growth_oom={2})
+        eng = ServeEngine(HYBRID, params_for(HYBRID), n_slots=3,
+                          budget=32, paged=True, page_size=4,
+                          prefill_impl="xla", fault_plan=plan)
+        reqs = mk_trace([(5, 6, 0), (8, 5, 0), (4, 7, 1), (6, 4, 2)],
+                        seed=11)
+        eng.run(reqs)
+        assert eng.stats["swap_ins"] >= 1
+        h = eng.metrics.histogram("queue_wait_ticks")
+        assert h.n == eng.stats["prefills"] + eng.stats["swap_ins"]
+        # a resumed wait is at least one tick (preempted at t, back at
+        # t+1 or later), so the histogram's tail reflects it
+        assert h.percentile(100) >= 1
+
     def test_cow_markers_link_page_cow_events(self):
         # two sequences share a 2-page prefix; the swa ring wraps back
         # into the shared pages mid-decode → copy-on-write

@@ -412,6 +412,149 @@ def test_shared_pages_counted_once():
     assert peak_on <= peak_off - 2 * (len(reqs) - 1)
 
 
+# ------------------------------------- sharing-aware victim scoring --------
+
+def test_exclusive_pages_counts_only_refcount_one():
+    """``exclusive_pages`` is the preemption victim score's dominant
+    term: only pages the slot holds at refcount 1 count — registration
+    alone is not sharing, a mapped-by-reference prefix contributes
+    nothing, and a slot holding *only* shared pages scores 0 (evicting
+    it would free no pool pages at all)."""
+    mgr = PagedCacheManager(DENSE, 3, 16, page_size=4)
+    pre = sys_prompt(8)
+    assert mgr.admit_pages(0, 9)                 # 3 pages, all exclusive
+    mgr.register_prefix(0, pre + [42])           # registers 2 full pages
+    assert mgr.exclusive_pages(0) == 3           # registered ≠ shared
+    shared_toks, ids = mgr.match_prefix(pre + [7])
+    assert shared_toks == 8
+    assert mgr.admit_pages(1, 9, shared=ids)     # 2 by reference + 1 fresh
+    assert mgr.exclusive_pages(0) == 1
+    assert mgr.exclusive_pages(1) == 1
+    assert mgr.admit_pages(2, 8, shared=ids)     # fully shared mapping
+    assert mgr.exclusive_pages(2) == 0
+
+
+def test_victim_prefers_exclusive_page_holder():
+    """The old youngest-first policy would evict the youngest sequence
+    even when its pages are mostly shared (freeing ~nothing); the
+    sharing-aware score must pick the holder of the most exclusive
+    pages instead — and the evicted sequence must still resume
+    bit-exactly."""
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(8)
+    uniq = sys_prompt(12, seed=9)
+    reqs = [Request(0, pre, 12, arrival=0),      # registers the prefix
+            Request(1, uniq, 12, arrival=0),     # every page exclusive
+            Request(2, pre + [3], 12, arrival=1)]  # youngest, shares pre
+    eng = ServeEngine(cfg, params, n_slots=3, budget=24, paged=True,
+                      page_size=4)
+    for r in reqs[:2]:
+        eng.submit(r)
+    eng.step()
+    eng.submit(reqs[2])
+    eng.step()
+    eng.step()
+    by_rid = {s.rid: s for s in eng.sequences}
+    mgr = eng.cache_mgr
+    assert mgr.exclusive_pages(by_rid[1].slot) > \
+        mgr.exclusive_pages(by_rid[2].slot)
+    victim = eng._preempt_one()
+    assert victim is by_rid[1], \
+        "victim must be the exclusive-page holder, not the youngest"
+    assert eng.stats["preemptions"] == 1
+    while not eng.done:
+        eng.step()
+    eng.finish()
+    assert eng.stats["swap_ins"] == 1
+    for r in reqs:
+        ref = lockstep_single(cfg, params, r.prompt, r.max_new_tokens, 24)
+        assert list(by_rid[r.rid].out_tokens) == ref, r.rid
+    for kind, alloc in eng.cache_mgr.alloc.items():
+        assert alloc.n_held == 0, kind
+
+
+# ------------------------------------- preempt → resume stays shared -------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 127))
+def test_preempt_resume_keeps_prefix_pages_shared(oom_tick, tail):
+    """Property (the tentpole's core invariant): a preempt → resume
+    cycle of a sequence holding shared prefix pages must re-attach to
+    the *same* physical pages by reference — after the swap-in the
+    shared pages sit at exactly refcount 2 (donor + resumed sharer, the
+    preemption pins dropped) and both slots' tables lead with the same
+    page run.  Before sharing-aware resume, swap-in restored the whole
+    row from the blob into fresh exclusive pages, leaving the donor's
+    copy at refcount 1 and the pool holding a duplicate."""
+    from repro.ft.inject import FaultPlan
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(8)                          # 2 shared pages at ps=4
+    eng = ServeEngine(cfg, params, n_slots=2, budget=24, paged=True,
+                      page_size=4,
+                      fault_plan=FaultPlan(growth_oom={oom_tick}))
+    donor = eng.submit(Request(0, pre, 8, arrival=0))
+    eng.step()
+    shared = {kind: [int(p) for p in
+                     eng.cache_mgr.tables[kind][donor.slot][:2]]
+              for kind in eng.cache_mgr.widths}
+    sharer = eng.submit(Request(1, pre + [tail], 8, arrival=1))
+    checked = False
+    while not eng.done:
+        eng.step()
+        if not checked and eng.stats["swap_ins"] == 1:
+            checked = True
+            for kind, pages in shared.items():
+                alloc = eng.cache_mgr.alloc[kind]
+                for p in pages:
+                    assert alloc.refcount(p) == 2, \
+                        (kind, p, alloc.refcount(p))
+                for s in eng._slot_seq:
+                    row = eng.cache_mgr.tables[kind][s][:2]
+                    assert [int(q) for q in row] == pages, (kind, s)
+    eng.finish()
+    assert eng.stats["preemptions"] == 1 and checked
+    assert eng.stats["resume_shared_tokens"] >= 8
+    assert list(donor.out_tokens) == \
+        lockstep_single(cfg, params, pre, 8, 24)
+    assert list(sharer.out_tokens) == \
+        lockstep_single(cfg, params, pre + [tail], 8, 24)
+    for kind, alloc in eng.cache_mgr.alloc.items():
+        assert alloc.n_held == 0, kind
+
+
+# ------------------------------------------- decode-page fan-out -----------
+
+def test_fanout_decode_pages_shared_streams_exact():
+    """Agentic fan-out: continuations whose prompt extends an earlier
+    request's prompt *and output* share past the prompt — the seed's
+    decode-produced page was registered when it closed, so a 13-token
+    continuation prompt maps 12 tokens by reference (3 pages: 2 prompt
+    + 1 decode-produced) and prefills one.  Streams must equal the
+    unshared oracle bit-for-bit (decode-written K/V ≡ prefill-written
+    K/V)."""
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    pre = sys_prompt(8, seed=5)
+    seed_out = lockstep_single(cfg, params, pre, 12, 24)
+    stem = pre + seed_out[:4]        # prompt + one closed decode page
+    reqs = [Request(0, pre, 12, arrival=0),
+            Request(1, stem + [3], 8, arrival=5),
+            Request(2, stem + [11], 8, arrival=5)]
+    eng = ServeEngine(cfg, params, n_slots=3, budget=24, paged=True,
+                      page_size=4)
+    check_streams(cfg, params, eng, reqs, 24)
+    by_rid = {s.rid: s for s in eng.sequences}
+    # shared span exceeds the seed's 8-token prompt: decode pages shared
+    assert by_rid[1].shared_tokens == 12
+    assert by_rid[2].shared_tokens == 12
+    assert eng.stats["prefix_hits"] == 2
+    assert eng.stats["shared_tokens"] == 24
+    for kind, alloc in eng.cache_mgr.alloc.items():
+        assert alloc.n_held == 0, kind
+
+
 # -------------------------------------------- release on failure -----------
 
 @settings(max_examples=12)
@@ -430,11 +573,16 @@ def test_failure_releases_shared_prefix_exactly(kill_after, mode, tail):
 
     cfg = DENSE
     params = M.init_params(cfg, KEY)
-    pre = sys_prompt(8)                          # 2 full shared pages
+    pre = sys_prompt(8)                          # 1 full shared page at ps=8
     plan = FaultPlan(nan_at={(1, 1 + kill_after)}) if mode == "nan" \
         else None
+    # page_size=8: the donor can never close a decode-produced page
+    # inside the 16-position budget, so the pre-admission snapshot stays
+    # the exact expected state (with ps=4 the donor's own decode-page
+    # registration at pos 12 would legitimately extend the index
+    # mid-window — that behaviour has its own tests)
     eng = ServeEngine(cfg, params, n_slots=2, budget=16, paged=True,
-                      page_size=4, fault_plan=plan)
+                      page_size=8, fault_plan=plan)
     donor = eng.submit(Request(0, pre, 8))
     eng.step()                                   # donor settles in page 2
     snap_alloc = {k: a.state() for k, a in eng.cache_mgr.alloc.items()}

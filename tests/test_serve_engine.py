@@ -146,6 +146,62 @@ def test_scheduler_fifo_and_slot_reuse():
     assert s.n_waiting == 0 and s.n_free == 0
 
 
+def test_scheduler_remove_tombstones_and_free_set():
+    """remove() is O(1): the sequence is tombstoned and physically
+    dropped when it surfaces at the head — it must never be admitted —
+    and the free list's set mirror still catches double releases."""
+    s = SlotScheduler(2)
+    a, b, c = (s.submit(Request(i, [1], 4)) for i in range(3))
+    assert s.remove(b)
+    assert not s.remove(b)                   # already withdrawn
+    assert s.n_waiting == 2
+    got = s.admit()                          # b never surfaces
+    assert [(q.rid, slot) for q, slot in got] == [(0, 0), (2, 1)]
+    assert s.n_waiting == 0
+    assert not s.remove(a)                   # bound ≠ waiting
+    s.release(1)
+    s.release(0)
+    with pytest.raises(AssertionError):
+        s.release(0)                         # double release still caught
+    # lowest slot first across out-of-order releases
+    d = s.submit(Request(3, [1], 4))
+    assert s.pop_bind() == (d, 0)
+    # preemption-style resurrection of a previously removed sequence
+    s.requeue_front(b)
+    assert s.peek() is b
+
+
+def test_reap_cost_independent_of_retired_sequences():
+    """The deadline/cancel sweep and the done check walk the *live* set:
+    after N requests retire, a tick scans only the sequences still in
+    flight, not every sequence ever submitted (the long-running-server
+    regression: _reap used to iterate eng.sequences)."""
+    class SpyDict(dict):
+        def __init__(self, *a):
+            super().__init__(*a)
+            self.scanned = 0
+
+        def values(self):
+            self.scanned += len(self)
+            return super().values()
+
+    cfg = DENSE
+    params = M.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, n_slots=2, budget=16)
+    eng.run(mk_trace(cfg.vocab, [(4, 2, 0)] * 10))
+    assert len(eng.sequences) == 10 and eng.done
+    eng._live = spy = SpyDict(eng._live)
+    live = eng.submit(Request(99, [3, 1, 4], 4))
+    while not eng.done:
+        before = spy.scanned
+        eng.step()
+        assert spy.scanned - before <= 1, \
+            "per-tick sweep scanned retired sequences"
+    eng.finish()
+    assert live.status is Status.FINISHED
+    assert len(eng.sequences) == 11          # history is kept
+
+
 @pytest.mark.parametrize("cfg", [DENSE, SWA], ids=["full", "swa-ring"])
 def test_cache_slot_insert_extract_roundtrip(cfg):
     """insert puts a B=1 cache into its slot and nothing else; extract
